@@ -1,0 +1,27 @@
+"""Benchmark harness utilities: compile-excluded wall timing, CSV rows."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, repeats: int = 3, **kw):
+    """Median seconds per call, compile excluded (one warmup)."""
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(bench: str, config: str, seconds: float, derived: str = "") -> str:
+    return f"{bench},{config},{seconds * 1e6:.1f},{derived}"
+
+
+HEADER = "bench,config,us_per_call,derived"

@@ -1,0 +1,88 @@
+"""Paper Figure 2: prediction time per test point vs n — standard full CP,
+optimized full CP (ours), and ICP, per nonconformity measure.
+
+The paper's headline: optimized CP turns O(n^2 l) per prediction into
+O(n l) and lands within a small factor of ICP. Scaled to CPU-feasible n;
+the asymptotic slopes (not absolute times) are what reproduces Figure 2.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core.measures import kde as kde_m
+from repro.core.measures import knn as knn_m
+from repro.core.measures import lssvm as lssvm_m
+from repro.core import icp as icp_m
+from repro.data.synthetic import make_classification
+
+N_GRID = (64, 256, 1024, 4096)
+M_TEST = 8
+K = 15
+H = 1.0
+RHO = 1.0
+
+
+def run(n_grid=N_GRID, include_standard=True):
+    rows = []
+    for n in n_grid:
+        X, y = make_classification(n_samples=n + M_TEST, n_features=30,
+                                   seed=0)
+        X = jnp.asarray(X, jnp.float32)
+        y = jnp.asarray(y, jnp.int32)
+        Xtr, ytr, Xte = X[:n], y[:n], X[n:]
+        Y = 2.0 * ytr.astype(jnp.float32) - 1.0
+
+        # ---- k-NN family -------------------------------------------------
+        for simplified, name in ((False, "knn"), (True, "simplified_knn")):
+            if include_standard and n <= 1024:
+                t = timeit(knn_m.pvalues_standard, Xtr, ytr, Xte,
+                           k=K, simplified=simplified, n_labels=2)
+                rows.append(row(f"fig2/{name}/standard", f"n={n}",
+                                t / M_TEST, "O(n^2 l) per point"))
+            st = knn_m.fit(Xtr, ytr, k=K)
+            t = timeit(knn_m.pvalues_optimized, st, Xte, k=K,
+                       simplified=simplified, n_labels=2)
+            rows.append(row(f"fig2/{name}/optimized", f"n={n}",
+                            t / M_TEST, "O(n l) per point"))
+            ist = icp_m.fit_knn(Xtr, ytr, k=K, simplified=simplified,
+                                t=n // 2)
+            t = timeit(icp_m.pvalues_knn, ist, Xte, k=K,
+                       simplified=simplified, n_labels=2)
+            rows.append(row(f"fig2/{name}/icp", f"n={n}", t / M_TEST,
+                            "O((t + n - t) l)"))
+
+        # ---- KDE ----------------------------------------------------------
+        if include_standard and n <= 1024:
+            t = timeit(kde_m.pvalues_standard, Xtr, ytr, Xte, h=H,
+                       p_dim=30, n_labels=2)
+            rows.append(row("fig2/kde/standard", f"n={n}", t / M_TEST,
+                            "O(P_K n^2 l)"))
+        st = kde_m.fit(Xtr, ytr, h=H, n_labels=2)
+        t = timeit(kde_m.pvalues_optimized, st, Xte, h=H, p_dim=30,
+                   n_labels=2)
+        rows.append(row("fig2/kde/optimized", f"n={n}", t / M_TEST,
+                        "O(P_K n l)"))
+        ist = icp_m.fit_kde(Xtr, ytr, h=H, p_dim=30, n_labels=2, t=n // 2)
+        t = timeit(icp_m.pvalues_kde, ist, Xte, h=H, p_dim=30, n_labels=2)
+        rows.append(row("fig2/kde/icp", f"n={n}", t / M_TEST, ""))
+
+        # ---- LS-SVM (linear kernel) ---------------------------------------
+        if include_standard and n <= 256:
+            t = timeit(lssvm_m.pvalues_standard, Xtr, Y, Xte, rho=RHO)
+            rows.append(row("fig2/lssvm/standard", f"n={n}", t / M_TEST,
+                            "O(n^{w+1} l)"))
+        st = lssvm_m.fit(Xtr, Y, RHO)
+        t = timeit(lssvm_m.pvalues_optimized, st, Xte)
+        rows.append(row("fig2/lssvm/optimized", f"n={n}", t / M_TEST,
+                        "O(q^3 + n q) per point"))
+        ist = icp_m.fit_lssvm(Xtr, Y, RHO, t=n // 2)
+        t = timeit(icp_m.pvalues_lssvm, ist, Xte)
+        rows.append(row("fig2/lssvm/icp", f"n={n}", t / M_TEST, ""))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,35 @@
+"""Paper Figure 3: one-off training time of the optimized measures vs n
+(standard full CP has no training phase — its cost all lands at predict).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core.measures import kde as kde_m
+from repro.core.measures import knn as knn_m
+from repro.core.measures import lssvm as lssvm_m
+from repro.data.synthetic import make_classification
+
+N_GRID = (64, 256, 1024, 4096)
+
+
+def run(n_grid=N_GRID):
+    rows = []
+    for n in n_grid:
+        X, y = make_classification(n_samples=n, n_features=30, seed=0)
+        X = jnp.asarray(X, jnp.float32)
+        y = jnp.asarray(y, jnp.int32)
+        Y = 2.0 * y.astype(jnp.float32) - 1.0
+        t = timeit(knn_m.fit, X, y, k=15)
+        rows.append(row("fig3/knn/fit", f"n={n}", t, "O(n^2)"))
+        t = timeit(kde_m.fit, X, y, h=1.0, n_labels=2)
+        rows.append(row("fig3/kde/fit", f"n={n}", t, "O(P_K n^2)"))
+        t = timeit(lssvm_m.fit, X, Y, 1.0)
+        rows.append(row("fig3/lssvm/fit", f"n={n}", t, "O(n q^2 + q^3)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

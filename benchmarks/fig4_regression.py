@@ -1,0 +1,43 @@
+"""Paper Figure 4: k-NN CP regression — Papadopoulos et al. (2011)
+(standard path, O(n^2) per prediction) vs our incremental&decremental
+optimization (O(n log n) per prediction) vs ICP regression.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core import regression as reg
+from repro.data.synthetic import make_regression
+
+N_GRID = (64, 256, 1024, 4096)
+M_TEST = 8
+K = 7
+
+
+def run(n_grid=N_GRID):
+    rows = []
+    for n in n_grid:
+        X, y = make_regression(n_samples=n + M_TEST, n_features=30, seed=0)
+        X = jnp.asarray(X, jnp.float32)
+        y = jnp.asarray(y, jnp.float32)
+        Xtr, ytr, Xte = X[:n], y[:n], X[n:]
+
+        if n <= 1024:
+            t = timeit(reg.intervals_standard, Xtr, ytr, Xte, k=K,
+                       epsilon=0.1)
+            rows.append(row("fig4/papadopoulos2011", f"n={n}", t / M_TEST,
+                            "O(n^2 + n log n) per point"))
+        st = reg.fit(Xtr, ytr, k=K)
+        t = timeit(reg.intervals_optimized, st, Xte, k=K, epsilon=0.1)
+        rows.append(row("fig4/optimized", f"n={n}", t / M_TEST,
+                        "O(n log n) per point"))
+        t = timeit(reg.icp_intervals, Xtr, ytr, Xte, k=K, t=n // 2,
+                   epsilon=0.1)
+        rows.append(row("fig4/icp", f"n={n}", t / M_TEST, "O(t) per point"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,77 @@
+"""Deliverable (g): roofline table from the dry-run's compiled artifacts.
+
+Reads dryrun_results.json (produced by ``python -m repro.launch.dryrun
+--all --both-meshes --out dryrun_results.json``) and derives, per
+(arch x shape x mesh):
+
+    t_compute   = HLO_FLOPs / (chips x 197e12)        [jaxpr-exact FLOPs]
+    t_memory    = HBM bytes per device / 819e9        [post-fusion model]
+    t_collective= weighted collective bytes / 50e9    [AR counts 2x]
+    dominant term, MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D
+    (inference), and MODEL_FLOPS / HLO_FLOPs (useful-compute fraction).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.analysis.hlo import model_flops_per_step, roofline_terms
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..",
+                       "dryrun_results.json")
+
+
+def derive(cell: dict) -> dict:
+    chips = 512 if cell["mesh"] == "2x16x16" else 256
+    mem = cell.get("device_hbm_bytes_flash_adjusted",
+                   cell["device_hbm_bytes"])
+    terms = roofline_terms(cell["flops_global"], mem,
+                           cell["collective_bytes"], chips)
+    kind = "train" if cell["kind"] == "train" else "inference"
+    mf = model_flops_per_step(cell["active_params"],
+                              cell["tokens_per_step"], kind)
+    useful = mf / max(cell["flops_global"], 1.0)
+    t_roof = max(terms["t_compute_s"], 1e-12)
+    t_bound = max(terms["t_compute_s"], terms["t_memory_s"],
+                  terms["t_collective_s"])
+    return {
+        **{k: cell[k] for k in ("arch", "shape", "mesh", "kind")},
+        **terms,
+        "model_flops": mf,
+        "useful_fraction": useful,
+        "roofline_fraction": t_roof / t_bound,  # achievable step-time share
+        "temp_gib": cell["memory"]["temp_bytes"] / 2 ** 30,
+    }
+
+
+def run(path=RESULTS, mesh_filter="16x16"):
+    rows = []
+    if not os.path.exists(path):
+        return [f"roofline,missing,{path},run the dryrun sweep first"]
+    with open(path) as f:
+        results = json.load(f)
+    hdr = (f"{'arch':18s} {'shape':12s} {'mesh':8s} {'t_comp':>9s} "
+           f"{'t_mem':>9s} {'t_coll':>9s} dom        "
+           f"{'useful':>7s} {'roof%':>6s} {'tempGiB':>8s}")
+    rows.append("roofline," + hdr)
+    for cell in results:
+        if cell["status"] != "ok":
+            if cell["status"] == "skipped" and cell["mesh" if "mesh" in
+                                                    cell else "shape"]:
+                continue
+            continue
+        if mesh_filter and cell["mesh"] != mesh_filter:
+            continue
+        d = derive(cell)
+        rows.append(
+            f"roofline,{d['arch']:18s} {d['shape']:12s} {d['mesh']:8s} "
+            f"{d['t_compute_s']:9.4f} {d['t_memory_s']:9.4f} "
+            f"{d['t_collective_s']:9.4f} {d['dominant']:10s} "
+            f"{d['useful_fraction']:7.3f} "
+            f"{100 * d['roofline_fraction']:5.1f}% {d['temp_gib']:8.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(mesh_filter=None):
+        print(r)

@@ -1,0 +1,66 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig2,...]
+
+Prints ``bench,config,us_per_call,derived`` CSV rows. CPU container note:
+absolute times are CPU-XLA; the asymptotic slopes across the n-grid are
+the quantities that reproduce the paper's figures (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import HEADER
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller n-grids (CI mode)")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bootstrap_bench, fig2_predict_time,
+                            fig3_train_time, fig4_regression, online_bench,
+                            roofline, table2_highdim, table3_parallel)
+
+    suites = {
+        "fig2": lambda: fig2_predict_time.run(
+            n_grid=(64, 256) if args.quick else fig2_predict_time.N_GRID),
+        "fig3": lambda: fig3_train_time.run(
+            n_grid=(64, 256) if args.quick else fig3_train_time.N_GRID),
+        "fig4": lambda: fig4_regression.run(
+            n_grid=(64, 256) if args.quick else fig4_regression.N_GRID),
+        "table2": lambda: table2_highdim.run(
+            n_train=256 if args.quick else table2_highdim.N_TRAIN,
+            m_test=8 if args.quick else table2_highdim.M_TEST),
+        "table3": lambda: table3_parallel.run(
+            n=256 if args.quick else table3_parallel.N),
+        "bootstrap": lambda: bootstrap_bench.run(
+            n=24 if args.quick else 48),
+        "online": lambda: online_bench.run(
+            t_grid=(64,) if args.quick else (64, 256, 1024)),
+        "roofline": lambda: roofline.run(mesh_filter=None),
+    }
+    only = set(args.only.split(",")) if args.only else set(suites)
+
+    print(HEADER)
+    failed = 0
+    for name, fn in suites.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        try:
+            for r in fn():
+                print(r)
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{name},ERROR,0,{type(e).__name__}: {e}")
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

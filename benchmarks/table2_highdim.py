@@ -1,0 +1,67 @@
+"""Paper Table 2 + Appendix G (MNIST): high-dimensional, 10-label setting.
+
+Synthetic stand-in for MNIST (offline container): 784 features, 10 labels.
+Reports train/predict time for optimized CP vs ICP, plus the statistical
+comparison the paper's optimizations make feasible: fuzziness of full CP vs
+ICP (full CP should win — Appendix G).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import icp as icp_m
+from repro.core import pvalues as pv
+from repro.core.measures import knn as knn_m
+from repro.data.synthetic import make_classification
+
+N_TRAIN = 2048
+M_TEST = 32
+K = 15
+
+
+def run(n_train=N_TRAIN, m_test=M_TEST):
+    rows = []
+    X, y = make_classification(
+        n_samples=n_train + m_test, n_features=784, n_informative=64,
+        n_classes=10, seed=0, class_sep=2.0)
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.int32)
+    Xtr, ytr = X[:n_train], y[:n_train]
+    Xte, yte = X[n_train:], y[n_train:]
+
+    for simplified, name in ((True, "simplified_knn"), (False, "knn")):
+        t_fit = timeit(knn_m.fit, Xtr, ytr, k=K)
+        st = knn_m.fit(Xtr, ytr, k=K)
+        t_pred = timeit(knn_m.pvalues_optimized, st, Xte, k=K,
+                        simplified=simplified, n_labels=10)
+        p_cp = knn_m.pvalues_optimized(st, Xte, k=K, simplified=simplified,
+                                       n_labels=10)
+        rows.append(row(f"table2/{name}/optimized_fit",
+                        f"n={n_train},p=784,l=10", t_fit, ""))
+        rows.append(row(f"table2/{name}/optimized_pred",
+                        f"m={m_test}", t_pred / m_test, ""))
+
+        ist = icp_m.fit_knn(Xtr, ytr, k=K, simplified=simplified,
+                            t=n_train // 2)
+        t_icp = timeit(icp_m.pvalues_knn, ist, Xte, k=K,
+                       simplified=simplified, n_labels=10)
+        p_icp = icp_m.pvalues_knn(ist, Xte, k=K, simplified=simplified,
+                                  n_labels=10)
+        rows.append(row(f"table2/{name}/icp_pred", f"m={m_test}",
+                        t_icp / m_test, ""))
+
+        fz_cp = float(jnp.mean(pv.fuzziness(p_cp)))
+        fz_icp = float(jnp.mean(pv.fuzziness(p_icp)))
+        cov_cp, _ = pv.coverage(p_cp, yte, 0.1)
+        rows.append(row(f"table2/{name}/fuzziness", "cp_vs_icp", 0.0,
+                        f"cp={fz_cp:.5f} icp={fz_icp:.5f} "
+                        f"cp_better={fz_cp <= fz_icp} "
+                        f"cov@0.1={float(cov_cp):.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,65 @@
+"""Multi-device full CP serving (paper technique x the production mesh).
+
+    PYTHONPATH=src python examples/distributed_cp.py
+
+Runs this host with 8 placeholder devices, shards a calibration set across
+a (4 data x 2 model) mesh — rows over "data", queries over "model" — and
+serves exact full-CP p-values with ONE scalar psum per (query, label),
+verifying bit-equality against the single-device optimized path. The same
+code drives the 512-chip production mesh (core/distributed.py).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import distributed as dist  # noqa: E402
+from repro.core.measures import knn as knn_m  # noqa: E402
+from repro.data.synthetic import make_classification  # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
+
+    n, m = 20_000, 16
+    X, y = make_classification(n_samples=n + m, n_features=30, seed=0)
+    X = X.astype(np.float32)
+    Xtr, ytr, Xte = X[:n], y[:n].astype(np.int32), X[n:]
+
+    t0 = time.perf_counter()
+    state = knn_m.fit(jnp.asarray(Xtr), jnp.asarray(ytr), k=15)
+    jax.block_until_ready(state.best_same)
+    print(f"fit O(n^2) calibration (n={n}): "
+          f"{time.perf_counter() - t0:.2f}s")
+
+    ref = np.asarray(knn_m.pvalues_optimized(
+        state, jnp.asarray(Xte), k=15, simplified=False, n_labels=2))
+
+    cfg = dist.CpShardingConfig(row_axes=("data",), query_axis="model")
+    st_sh = dist.shard_knn_state(state, mesh, cfg)
+    fn = dist.make_knn_pvalues_fn(mesh, k=15, simplified=False, n_labels=2,
+                                  cfg=cfg)
+    Xte_sh = jax.device_put(jnp.asarray(Xte),
+                            NamedSharding(mesh, P("model", None)))
+    out = fn(st_sh, Xte_sh)  # compile
+    t0 = time.perf_counter()
+    out = np.asarray(fn(st_sh, Xte_sh))
+    dt = time.perf_counter() - t0
+    print(f"sharded predict: {m} queries x 2 labels in {dt * 1e3:.1f}ms "
+          f"({n // 4} rows/device)")
+    print(f"max |sharded - single-device| = {np.abs(out - ref).max():.2e} "
+          f"(exact)")
+    print(f"p-values for first 4 queries:\n{np.round(out[:4], 4)}")
+
+
+if __name__ == "__main__":
+    main()

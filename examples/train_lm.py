@@ -1,0 +1,79 @@
+"""End-to-end training driver: train a reduced-family LM for a few hundred
+steps on CPU with the full production runtime (checkpointing, restart,
+straggler monitor), then attach a conformal OOD head to the trained model.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen2-1.5b \\
+        --steps 300 --batch 8 --seq-len 128
+
+The full-scale configs run the same code path on the production mesh; this
+drives the reduced config end-to-end. Expect the loss to fall well below
+the unigram entropy as the model learns the stream's echo structure.
+"""
+import argparse
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as cfgs
+from repro.core.lm_conformal import ConformalOodDetector, sequence_embedding
+from repro.data.lm_pipeline import TokenStream
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+from repro.optim import OptimizerConfig
+from repro.runtime import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--fresh", action="store_true")
+    args = ap.parse_args()
+
+    if args.fresh:
+        shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    cfg = cfgs.get(args.arch).reduced()
+    mesh = make_host_mesh(1, 1)
+    tcfg = TrainerConfig(
+        steps=args.steps, ckpt_every=max(50, args.steps // 4),
+        ckpt_dir=args.ckpt_dir, log_every=max(10, args.steps // 10),
+        batch=args.batch, seq_len=args.seq_len)
+    ocfg = OptimizerConfig(peak_lr=1e-3, end_lr=1e-4,
+                           warmup_steps=args.steps // 20,
+                           total_steps=args.steps)
+    out = Trainer(cfg, tcfg, mesh, ocfg).run()
+    print(f"\nloss: {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f} "
+          f"over {len(out['losses'])} steps")
+
+    if "final_params" not in out:
+        return
+    params = out["final_params"]
+
+    # conformal head on the trained model: calibrate on in-distribution
+    # traffic, then score clean vs corrupted requests
+    stream = TokenStream(cfg, 256, args.seq_len, seed=7)
+    calib = {k: jnp.asarray(v) for k, v in stream.batch_at(0).items()}
+    emb_fn = jax.jit(lambda p, b: sequence_embedding(p, cfg, b, lm))
+    det = ConformalOodDetector(k=7).fit(emb_fn(params, calib))
+
+    test = {k: jnp.asarray(v) for k, v in stream.batch_at(1).items()}
+    p_in = np.asarray(det.pvalues(emb_fn(params, test)))
+    corrupted = dict(test)
+    corrupted["tokens"] = jax.random.randint(
+        jax.random.PRNGKey(0), test["tokens"].shape, 0, cfg.vocab_size,
+        dtype=jnp.int32)
+    p_out = np.asarray(det.pvalues(emb_fn(params, corrupted)))
+    print(f"conformal OOD head (trained embeddings): "
+          f"mean p in-dist={p_in.mean():.3f} (uniform-ish), "
+          f"corrupted={p_out.mean():.3f} (small)")
+    print(f"flagged at eps=0.1: in-dist {np.mean(p_in <= 0.1):.2%} "
+          f"(guarantee: <= 10%), corrupted {np.mean(p_out <= 0.1):.2%}")
+
+
+if __name__ == "__main__":
+    main()

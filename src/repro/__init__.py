@@ -1,0 +1,3 @@
+"""repro: exact optimization of conformal predictors (ICML 2021) as a
+production JAX framework with multi-pod distribution."""
+__version__ = "1.0.0"

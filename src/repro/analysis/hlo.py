@@ -1,0 +1,349 @@
+"""Optimized-HLO analysis: collective bytes + HBM traffic, while-trip aware.
+
+``compiled.cost_analysis()`` has no collective term and counts while bodies
+once, so both remaining roofline terms are recovered from the HLO text:
+
+* The module is split into named computations; ``while`` ops link body and
+  condition computations, whose trip count is read from the loop bound
+  constant in the condition (scan lowering: induction 0..N, direction=LT).
+* Multiplicities propagate: ops inside a while body executing N times under
+  a body executing M times count N*M.
+* Collective bytes: result sizes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (and their -start forms),
+  x multiplicity. Per-device quantities (post-SPMD HLO).
+* HBM bytes: per top-level op, operand+result sizes (a post-fusion traffic
+  model: fusion internals live in registers/VMEM, the fusion op's operands
+  and results are the HBM transfers). Free ops (bitcast, tuple, gte,
+  parameter) skipped; computations referenced by fusion ``calls=`` skipped.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "bitcast", "parameter", "constant",
+    "partition-id", "replica-id", "after-all", "add-dependency",
+    "opt-barrier", "domain", "get-dimension-size",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# result type may be a tuple containing /*index=N*/ comments — allow
+# anything up to the closing paren (tuple types never nest parens)
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\([^)]*\)|\w+\[[^\]]*\]\S*)\s+"
+    r"([\w\-]+)[(.]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(")
+_CALL_ATTR_RE = re.compile(r"(?:calls|body|condition|to_apply)=(%[\w.\-]+)")
+_OPERAND_RE = re.compile(r"\((%[\w.\-]+(?:,\s*%[\w.\-]+)*)?\)")
+_PARAM_SIG_RE = re.compile(r"(\w[\w.\-]*):\s*((?:\([^)]*\))|(?:[^,)]+))")
+
+
+def _bytes_of_type(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_bytes: int
+    operands: list
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    defs: dict = field(default_factory=dict)  # %name -> bytes
+    params: list = field(default_factory=list)  # ordered (%name, bytes)
+    whiles: list = field(default_factory=list)  # (body, cond) comp names
+    fusion_calls: set = field(default_factory=set)
+    max_int_constant: int = 0
+
+
+def parse_module(hlo_text: str) -> dict:
+    comps: dict = {}
+    cur: Computation | None = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        mc = _COMP_RE.match(line)
+        if mc and ("->" in line or line.endswith("{")):
+            cur = Computation(mc.group(1))
+            comps[cur.name] = cur
+            # parameter types from the signature (ordered)
+            sig = line[line.index("("):]
+            for pm in _PARAM_SIG_RE.finditer(sig):
+                pname = "%" + pm.group(1)
+                pbytes = _bytes_of_type(pm.group(2))
+                cur.defs[pname] = pbytes
+                cur.params.append((pname, pbytes))
+            continue
+        if cur is None:
+            continue
+        md = _DEF_RE.match(line)
+        if not md:
+            continue
+        name, type_str, kind = md.groups()
+        rb = _bytes_of_type(type_str)
+        cur.defs[name] = rb
+        # operand names: every %ref before the first attribute assignment
+        tail = line[md.end():]
+        attr_cut = re.split(r",\s*\w+=", tail, maxsplit=1)[0]
+        operands = re.findall(r"%[\w.\-]+", attr_cut)
+        op = Op(name, kind, rb, operands, line)
+        cur.ops.append(op)
+        for cm in re.finditer(r"constant\((\d+)\)", line):
+            cur.max_int_constant = max(cur.max_int_constant,
+                                       int(cm.group(1)))
+        if kind == "while":
+            attrs = dict(
+                (k, v) for k, v in re.findall(
+                    r"(body|condition)=(%[\w.\-]+)", line))
+            if "body" in attrs and "condition" in attrs:
+                mt = _TRIP_RE.search(line)
+                trip = int(mt.group(1)) if mt else None
+                cur.whiles.append((attrs["body"], attrs["condition"], trip))
+        if kind == "fusion" or "calls=" in line:
+            for m2 in re.finditer(r"calls=(%[\w.\-]+)", line):
+                cur.fusion_calls.add(m2.group(1))
+        for m2 in re.finditer(r"to_apply=(%[\w.\-]+)", line):
+            cur.fusion_calls.add(m2.group(1))
+    return comps
+
+
+def _entry_name(comps: dict, hlo_text: str) -> str:
+    m = re.search(r"^ENTRY\s+(%[\w.\-]+)", hlo_text, re.M)
+    if m:
+        return m.group(1)
+    return next(iter(comps))
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = cond.max_int_constant
+    # the bound constant may sit in a fused compare computation
+    for sub in cond.fusion_calls:
+        if sub in comps:
+            best = max(best, comps[sub].max_int_constant)
+    return max(best, 1)
+
+
+def computation_multiplicities(hlo_text: str) -> dict:
+    """{computation_name: times executed per step} via while nesting."""
+    comps = parse_module(hlo_text)
+    entry = _entry_name(comps, hlo_text)
+    mult: dict = defaultdict(float)
+    seen_stack = []
+
+    def visit(name: str, m: float):
+        if name not in comps or name in seen_stack:
+            return
+        mult[name] += m
+        seen_stack.append(name)
+        comp = comps[name]
+        for body, cond, trip in comp.whiles:
+            n = trip if trip is not None else _trip_count(comps, cond)
+            visit(body, m * n)
+            visit(cond, m * (n + 1))
+        seen_stack.pop()
+
+    visit(entry, 1.0)
+    return {"comps": comps, "mult": dict(mult), "entry": entry}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind collective result bytes per device, while-trip weighted."""
+    info = computation_multiplicities(hlo_text)
+    comps, mult = info["comps"], info["mult"]
+    out: dict = defaultdict(float)
+    for cname, m in mult.items():
+        for op in comps[cname].ops:
+            kind = op.kind
+            if kind.endswith("-done"):
+                continue
+            for c in COLLECTIVES:
+                if kind == c or kind == c + "-start":
+                    out[c] += m * op.result_bytes
+                    break
+    return {k: float(v) for k, v in out.items()}
+
+
+def _fusion_traffic(op: Op, comp: Computation, comps: dict) -> float:
+    """Operand+result bytes for a fusion, with dynamic-(update-)slice
+    awareness: a fusion that slices a big buffer only reads the slice; one
+    that updates in place only writes the update (XLA aliases the buffer)."""
+    called_name = None
+    m = re.search(r"calls=(%[\w.\-]+)", op.line)
+    if m:
+        called_name = m.group(1)
+    called = comps.get(called_name)
+    if called is None:
+        b = op.result_bytes
+        for o in op.operands:
+            b += comp.defs.get(o, 0)
+        return b
+
+    # which internal params are consumed by dynamic-slice / DUS?
+    sliced_param_read = {}
+    dus_write = None
+    for iop in called.ops:
+        if iop.kind == "dynamic-slice" and iop.operands:
+            sliced_param_read[iop.operands[0]] = iop.result_bytes
+        if iop.kind == "dynamic-update-slice" and len(iop.operands) >= 2:
+            sliced_param_read[iop.operands[0]] = 0  # aliased in-place read
+            dus_write = called.defs.get(iop.operands[1], iop.result_bytes)
+
+    b = dus_write if dus_write is not None else op.result_bytes
+    for i, o in enumerate(op.operands):
+        pname = called.params[i][0] if i < len(called.params) else None
+        if pname is not None and pname in sliced_param_read:
+            b += sliced_param_read[pname]
+        else:
+            b += comp.defs.get(o, 0)
+    return b
+
+
+# chunked-attention score-tile signature: f32 rank>=2 tensors whose two
+# trailing dims are the (block_q, block_k) tile of kernels/ref.py's
+# chunked_attention. On the CPU container these tiles hit HBM every
+# (q-block, kv-block) step; the TPU target runs the Pallas flash kernel
+# (kernels/flash_attention.py) where they live in VMEM scratch — so the
+# roofline's memory term subtracts them (EXPERIMENTS.md §Roofline note).
+_FLASH_TILE_RE = re.compile(r"f32\[[\d,]*1024,1024\]")
+
+
+def _is_flash_tile(line: str) -> bool:
+    return bool(_FLASH_TILE_RE.search(line.split(" = ")[-1][:60]))
+
+
+def hbm_bytes(hlo_text: str, flash_adjusted: bool = False) -> float:
+    """Post-fusion HBM traffic model: operand+result bytes of every counted
+    top-level op, while-trip weighted. Per device.
+
+    flash_adjusted=True removes traffic of ops *producing* attention score
+    tiles (see _FLASH_TILE_RE) — the VMEM-resident tiles of the TPU
+    flash-attention kernel that the CPU stand-in materializes."""
+    info = computation_multiplicities(hlo_text)
+    comps, mult = info["comps"], info["mult"]
+    total = 0.0
+    for cname, m in mult.items():
+        comp = comps[cname]
+        tile_defs = set()
+        if flash_adjusted:
+            for op in comp.ops:
+                if _is_flash_tile(op.line):
+                    tile_defs.add(op.name)
+        for op in comp.ops:
+            if op.kind in _FREE_OPS or op.kind == "while":
+                continue
+            if flash_adjusted and op.name in tile_defs:
+                continue  # tile producer: VMEM-resident on the TPU target
+            if op.kind == "fusion":
+                b = _fusion_traffic(op, comp, comps)
+                if flash_adjusted:  # tile operands also stay in VMEM
+                    for o in op.operands:
+                        if o in tile_defs:
+                            b = max(0.0, b - comp.defs.get(o, 0))
+                total += m * b
+                continue
+            if op.kind == "dynamic-slice":
+                total += m * 2 * op.result_bytes
+                continue
+            if op.kind == "dynamic-update-slice":
+                upd = comp.defs.get(op.operands[1], 0) \
+                    if len(op.operands) >= 2 else 0
+                total += m * 2 * upd
+                continue
+            b = op.result_bytes
+            for o in op.operands:
+                if flash_adjusted and o in tile_defs:
+                    continue
+                b += comp.defs.get(o, 0)
+            total += m * b
+    return total
+
+
+def count_ops(hlo_text: str) -> dict:
+    """Census of interesting ops (while-trip weighted)."""
+    info = computation_multiplicities(hlo_text)
+    comps, mult = info["comps"], info["mult"]
+    counts: dict = defaultdict(float)
+    interesting = COLLECTIVES + (
+        "fusion", "dot", "convolution", "while", "custom-call",
+        "dynamic-update-slice", "copy", "transpose")
+    for cname, m in mult.items():
+        for op in comps[cname].ops:
+            for k in interesting:
+                if op.kind == k or op.kind == k + "-start":
+                    counts[k] += m
+                    break
+    return {k: float(v) for k, v in counts.items()}
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (TPU v5e constants)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+def roofline_terms(global_flops: float, device_hbm_bytes: float,
+                   coll_bytes: dict, n_chips: int) -> dict:
+    """Three per-step roofline times in seconds.
+
+    global_flops: whole-program (jaxpr counter); divided across chips.
+    device_hbm_bytes / coll_bytes: already per-device (post-SPMD HLO).
+    All-reduce moves ~2x the buffer on a ring; others ~1x.
+    """
+    t_compute = global_flops / (n_chips * PEAK_FLOPS_BF16)
+    t_memory = device_hbm_bytes / HBM_BW
+    cb = 0.0
+    for kind, b in coll_bytes.items():
+        cb += (2.0 if kind == "all-reduce" else 1.0) * b
+    t_coll = cb / ICI_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)),
+        key=lambda kv: kv[1])[0]
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant}
+
+
+def model_flops_per_step(n_active_params: int, tokens_per_step: int,
+                         kind: str = "train") -> float:
+    """6ND for train (fwd+bwd), 2ND for inference forward."""
+    c = 6.0 if kind == "train" else 2.0
+    return c * n_active_params * tokens_per_step
+
+
+__all__ = ["collective_bytes", "hbm_bytes", "count_ops",
+           "computation_multiplicities", "roofline_terms",
+           "model_flops_per_step", "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW"]

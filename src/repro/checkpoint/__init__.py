@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing (async, atomic, elastic restore)."""
+from repro.checkpoint.store import CheckpointStore
+
+__all__ = ["CheckpointStore"]

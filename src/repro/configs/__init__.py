@@ -1,0 +1,44 @@
+"""Architecture registry: ``get(name)`` -> ArchConfig; ``names()`` lists.
+
+One module per assigned architecture, plus the paper's own experiment
+configuration (``paper``). Reduced smoke variants come from
+``get(name).reduced()``.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ArchConfig, LM_SHAPES, MlaConfig, MoeConfig,
+                                ShapeSpec, shape_by_name)
+
+ARCH_NAMES = (
+    "gemma3_1b",
+    "granite_34b",
+    "qwen3_1_7b",
+    "qwen2_1_5b",
+    "mixtral_8x22b",
+    "deepseek_v2_236b",
+    "internvl2_26b",
+    "recurrentgemma_9b",
+    "whisper_base",
+    "xlstm_125m",
+)
+
+_ALIASES = {n.replace("_", "-"): n for n in ARCH_NAMES}
+_ALIASES.update({"qwen3-1.7b": "qwen3_1_7b", "qwen2-1.5b": "qwen2_1_5b"})
+
+
+def get(name: str) -> ArchConfig:
+    name = _ALIASES.get(name, name)
+    if name not in ARCH_NAMES:
+        raise KeyError(f"unknown arch {name!r}; have {ARCH_NAMES}")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG
+
+
+def names() -> tuple:
+    return ARCH_NAMES
+
+
+__all__ = ["ArchConfig", "MoeConfig", "MlaConfig", "ShapeSpec", "LM_SHAPES",
+           "shape_by_name", "get", "names", "ARCH_NAMES"]

@@ -1,0 +1,2 @@
+"""Core: the paper contribution — exact full-CP optimization via
+incremental&decremental nonconformity measures."""

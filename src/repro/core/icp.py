@@ -1,0 +1,192 @@
+"""Inductive Conformal Prediction (paper Section 2.3, Appendix A, Algorithm 2).
+
+ICP is the computational baseline for every experiment in the paper: split Z
+into a proper training set (size t) and a calibration set (size n-t), train
+the nonconformity measure once on the proper set, score the calibration set
+once, and compute every test p-value against those fixed calibration scores:
+
+    p = (#{i in calib : alpha_i >= alpha} + 1) / (n - t + 1)
+
+Train+calibrate is O(T_A(t) + P_A(n-t)); one p-value is O(P_A(1) + n - t).
+Coverage still holds, but statistical efficiency (fuzziness) is strictly
+weaker than full CP (paper Appendix G) — that trade-off is the reason the
+paper's exact full-CP optimizations matter.
+
+Each ``Icp*`` class pairs with one of the measures in ``core/measures``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.measures import knn as knn_m
+from repro.core.measures import lssvm as lssvm_m
+
+
+def icp_pvalue(calib_scores: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
+    """ICP p-value; broadcasts over leading dims of alpha."""
+    nc = calib_scores.shape[-1]
+    count = jnp.sum(calib_scores >= alpha[..., None], axis=-1)
+    return (count + 1.0) / (nc + 1.0)
+
+
+# ---------------------------------------------------------------------------
+# k-NN ICP
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class IcpKnnState:
+    X_train: jnp.ndarray  # (t, p) proper training set
+    y_train: jnp.ndarray  # (t,)
+    calib_scores: jnp.ndarray  # (n - t,)
+
+    def tree_flatten(self):
+        return ((self.X_train, self.y_train, self.calib_scores), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _knn_score_against(X_ref, y_ref, x, y_hat, *, k, simplified):
+    """A((x, y_hat); reference set) for the (simplified) k-NN measure."""
+    d = jnp.sqrt(jnp.maximum(
+        jnp.sum((X_ref - x[None]) ** 2, axis=-1), 0.0))
+    num = jnp.sum(knn_m._k_best(d, y_ref == y_hat, k))
+    if simplified:
+        return num
+    return num / jnp.sum(knn_m._k_best(d, y_ref != y_hat, k))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "simplified", "t"))
+def fit_knn(X, y, *, k, simplified, t) -> IcpKnnState:
+    """Train on Z[:t], score Z[t:] against Z[:t]."""
+    X_tr, y_tr = X[:t], y[:t]
+    X_cal, y_cal = X[t:], y[t:]
+    scores = jax.vmap(
+        lambda xc, yc: _knn_score_against(
+            X_tr, y_tr, xc, yc, k=k, simplified=simplified)
+    )(X_cal, y_cal)
+    return IcpKnnState(X_tr, y_tr, scores)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "simplified", "n_labels"))
+def pvalues_knn(state: IcpKnnState, X_test, *, k, simplified, n_labels):
+    labels = jnp.arange(n_labels, dtype=state.y_train.dtype)
+
+    def per_test(x_t):
+        def per_label(y_hat):
+            a = _knn_score_against(
+                state.X_train, state.y_train, x_t, y_hat,
+                k=k, simplified=simplified)
+            return icp_pvalue(state.calib_scores, a)
+
+        return jax.vmap(per_label)(labels)
+
+    return jax.lax.map(per_test, X_test)
+
+
+# ---------------------------------------------------------------------------
+# KDE ICP
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class IcpKdeState:
+    X_train: jnp.ndarray
+    y_train: jnp.ndarray
+    class_counts: jnp.ndarray  # (n_labels,) counts in the proper set
+    calib_scores: jnp.ndarray
+
+    def tree_flatten(self):
+        return ((self.X_train, self.y_train, self.class_counts,
+                 self.calib_scores), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _kde_score_against(X_ref, y_ref, counts, x, y_hat, *, h, p_dim):
+    d2 = jnp.maximum(jnp.sum((X_ref - x[None]) ** 2, axis=-1), 0.0)
+    kv = jnp.exp(-d2 / (2.0 * h * h))
+    same = y_ref == y_hat
+    c = counts[y_hat.astype(jnp.int32)]
+    return -jnp.where(
+        c > 0, jnp.sum(jnp.where(same, kv, 0.0)) / (c * h ** p_dim), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("h", "p_dim", "n_labels", "t"))
+def fit_kde(X, y, *, h, p_dim, n_labels, t) -> IcpKdeState:
+    X_tr, y_tr = X[:t], y[:t]
+    counts = jnp.sum(
+        y_tr[None, :] == jnp.arange(n_labels, dtype=y.dtype)[:, None], axis=1)
+    scores = jax.vmap(
+        lambda xc, yc: _kde_score_against(
+            X_tr, y_tr, counts, xc, yc, h=h, p_dim=p_dim)
+    )(X[t:], y[t:])
+    return IcpKdeState(X_tr, y_tr, counts, scores)
+
+
+@functools.partial(jax.jit, static_argnames=("h", "p_dim", "n_labels"))
+def pvalues_kde(state: IcpKdeState, X_test, *, h, p_dim, n_labels):
+    labels = jnp.arange(n_labels, dtype=state.y_train.dtype)
+
+    def per_test(x_t):
+        def per_label(y_hat):
+            a = _kde_score_against(
+                state.X_train, state.y_train, state.class_counts, x_t, y_hat,
+                h=h, p_dim=p_dim)
+            return icp_pvalue(state.calib_scores, a)
+
+        return jax.vmap(per_label)(labels)
+
+    return jax.lax.map(per_test, X_test)
+
+
+# ---------------------------------------------------------------------------
+# LS-SVM ICP (binary, labels in {-1, +1})
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class IcpLssvmState:
+    w: jnp.ndarray  # (q,) model trained on the proper set
+    calib_scores: jnp.ndarray
+
+    def tree_flatten(self):
+        return ((self.w, self.calib_scores), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@functools.partial(jax.jit, static_argnames=("t",))
+def fit_lssvm(Phi, Y, rho, *, t) -> IcpLssvmState:
+    w = lssvm_m._train_w(Phi[:t], Y[:t], rho)
+    scores = -Y[t:] * (Phi[t:] @ w)
+    return IcpLssvmState(w, scores)
+
+
+@jax.jit
+def pvalues_lssvm(state: IcpLssvmState, Phi_test):
+    labels = jnp.array([-1.0, 1.0], dtype=Phi_test.dtype)
+    f = Phi_test @ state.w  # (m,)
+    alphas = -labels[None, :] * f[:, None]  # (m, 2)
+    return icp_pvalue(state.calib_scores, alphas)
+
+
+__all__ = [
+    "icp_pvalue",
+    "IcpKnnState", "fit_knn", "pvalues_knn",
+    "IcpKdeState", "fit_kde", "pvalues_kde",
+    "IcpLssvmState", "fit_lssvm", "pvalues_lssvm",
+]

@@ -1,0 +1,211 @@
+"""k-NN and simplified k-NN nonconformity measures (paper Sections 3, 3.1).
+
+Two implementation paths with **identical outputs**:
+
+* ``scores_standard`` / ``pvalues_standard`` — the naive full-CP algorithm:
+  for every test candidate, recompute all LOO scores against the augmented
+  training set from scratch. O(n^2 l m) for m test points (paper baseline).
+* ``fit`` + ``pvalues_optimized`` — the paper's incremental&decremental
+  optimization: a one-off O(n^2) training phase precomputes, per training
+  point, the k best same-label (and, for the ratio measure, different-label)
+  distances; prediction is O(n l m). The test-time update is the O(1)-per-
+  point rule of paper Fig. 1: if the test object enters point i's
+  neighbourhood, swap the k-th best distance for d(x_i, x).
+
+Distances are Euclidean. Missing neighbours (fewer than k candidates) use a
+BIG sentinel in *both* paths, so outputs agree exactly even in edge cases.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+BIG = 1e30
+
+
+def _dists_to_train(X_test, X):
+    """Euclidean distances (m, n) from test rows to training rows."""
+    return jnp.sqrt(jnp.maximum(kops.sq_dists(X_test, X), 0.0))
+
+
+def _k_best(d, mask, k):
+    """k smallest of d where mask, ascending, padded with BIG."""
+    d = jnp.where(mask, d, BIG)
+    return jnp.sort(-jax.lax.top_k(-d, k)[0])
+
+
+# ---------------------------------------------------------------------------
+# standard (naive) path
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k", "simplified"))
+def scores_standard(X, y, x_test, y_hat, *, k, simplified):
+    """Naive LOO scores for one candidate: (alphas (n,), alpha). O(n^2)."""
+    n = X.shape[0]
+    Xa = jnp.concatenate([X, x_test[None]], axis=0)
+    ya = jnp.concatenate([y, jnp.array([y_hat], dtype=y.dtype)])
+    D = _dists_to_train(Xa, Xa)
+    eye = jnp.eye(n + 1, dtype=bool)
+    same = (ya[:, None] == ya[None, :]) & ~eye
+    diff = (ya[:, None] != ya[None, :]) & ~eye
+
+    def row_score(drow, srow, frow):
+        num = jnp.sum(_k_best(drow, srow, k))
+        if simplified:
+            return num
+        return num / jnp.sum(_k_best(drow, frow, k))
+
+    scores = jax.vmap(row_score)(D, same, diff)
+    return scores[:n], scores[n]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "simplified", "n_labels"))
+def pvalues_standard(X, y, X_test, *, k, simplified, n_labels):
+    """Naive full CP p-values for all test points x all labels: (m, l)."""
+    labels = jnp.arange(n_labels, dtype=y.dtype)
+    n = X.shape[0]
+
+    def one(x_t, y_hat):
+        alphas, alpha = scores_standard(X, y, x_t, y_hat, k=k, simplified=simplified)
+        return (jnp.sum(alphas >= alpha) + 1.0) / (n + 1.0)
+
+    def per_test(x_t):
+        return jax.vmap(lambda lb: one(x_t, lb))(labels)
+
+    return jax.lax.map(per_test, X_test)
+
+
+# ---------------------------------------------------------------------------
+# optimized (incremental&decremental) path
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class KnnState:
+    """Provisional per-training-point state (paper Section 3.1).
+
+    ``best_same``/``best_diff`` hold each point's k best distances to
+    same/different-label training points (ascending, BIG-padded). Their sums
+    are the provisional scores alpha'_i; the last column is Delta_i^k.
+    """
+
+    X: jnp.ndarray  # (n, p)
+    y: jnp.ndarray  # (n,)
+    best_same: jnp.ndarray  # (n, k)
+    best_diff: jnp.ndarray  # (n, k)
+
+    def tree_flatten(self):
+        return ((self.X, self.y, self.best_same, self.best_diff), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n(self):
+        return self.X.shape[0]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def fit(X, y, *, k) -> KnnState:
+    """O(n^2) training phase: pairwise distances + k-best neighbour stats."""
+    D = _dists_to_train(X, X)
+    n = X.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    same = (y[:, None] == y[None, :]) & ~eye
+    diff = (y[:, None] != y[None, :]) & ~eye
+    best_same = jax.vmap(lambda d, m: _k_best(d, m, k))(D, same)
+    best_diff = jax.vmap(lambda d, m: _k_best(d, m, k))(D, diff)
+    return KnnState(X, y, best_same, best_diff)
+
+
+def _updated_scores(state: KnnState, d, y_hat, simplified: bool):
+    """O(1)-per-point incremental&decremental update (paper Fig. 1).
+
+    Cancellation-safe form: base = sum of the k-1 best distances; the score
+    is base + (kth or d). Never subtracts, so the BIG padding sentinel
+    (fewer than k same-label neighbours) cannot swallow the finite part in
+    f32 — exactness holds even when a class has < k members."""
+    base_same = jnp.sum(state.best_same[:, :-1], axis=-1)
+    kth_same = state.best_same[:, -1]
+    same = state.y == y_hat
+    upd = same & (d < kth_same)
+    num = base_same + jnp.where(upd, d, kth_same)
+    if simplified:
+        return num
+    base_diff = jnp.sum(state.best_diff[:, :-1], axis=-1)
+    kth_diff = state.best_diff[:, -1]
+    updd = (~same) & (d < kth_diff)
+    den = base_diff + jnp.where(updd, d, kth_diff)
+    return num / den
+
+
+def _candidate_score(state: KnnState, d, y_hat, k, simplified):
+    num = jnp.sum(_k_best(d, state.y == y_hat, k))
+    if simplified:
+        return num
+    return num / jnp.sum(_k_best(d, state.y != y_hat, k))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "simplified"))
+def scores_optimized(state: KnnState, x_test, y_hat, *, k, simplified):
+    """(alphas, alpha) for one candidate — exactness-tested vs standard."""
+    d = _dists_to_train(x_test[None], state.X)[0]
+    alphas = _updated_scores(state, d, y_hat, simplified)
+    return alphas, _candidate_score(state, d, y_hat, k, simplified)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "simplified", "n_labels"))
+def pvalues_optimized(state: KnnState, X_test, *, k, simplified, n_labels):
+    """Optimized full CP p-values (m, l); O(n l) per test point."""
+    labels = jnp.arange(n_labels, dtype=state.y.dtype)
+    n = state.n
+
+    def per_test(x_t):
+        d = _dists_to_train(x_t[None], state.X)[0]
+
+        def per_label(y_hat):
+            alphas = _updated_scores(state, d, y_hat, simplified)
+            alpha = _candidate_score(state, d, y_hat, k, simplified)
+            return (jnp.sum(alphas >= alpha) + 1.0) / (n + 1.0)
+
+        return jax.vmap(per_label)(labels)
+
+    return jax.lax.map(per_test, X_test)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def incremental_add(state: KnnState, x_new, y_new, *, k) -> KnnState:
+    """Online learning (paper Section 9): learn one example in O(n k).
+
+    Every training point whose neighbourhood the new point enters gets its
+    k-best list re-sorted with the new distance; the new point's own lists
+    are the k best of its distance row.
+    """
+    d = _dists_to_train(x_new[None], state.X)[0]
+    same = state.y == y_new
+
+    def insert(best, mask):
+        cand = jnp.where(mask, d, BIG)
+        merged = jnp.sort(
+            jnp.concatenate([best, cand[:, None]], axis=1), axis=1
+        )[:, :k]
+        return merged
+
+    new_same = insert(state.best_same, same)
+    new_diff = insert(state.best_diff, ~same)
+    own_same = _k_best(d, same, k)[None]
+    own_diff = _k_best(d, ~same, k)[None]
+    return KnnState(
+        jnp.concatenate([state.X, x_new[None]], axis=0),
+        jnp.concatenate([state.y, jnp.array([y_new], dtype=state.y.dtype)]),
+        jnp.concatenate([new_same, own_same], axis=0),
+        jnp.concatenate([new_diff, own_diff], axis=0),
+    )

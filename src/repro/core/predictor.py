@@ -1,0 +1,200 @@
+"""High-level conformal prediction API over every measure in the framework.
+
+``ConformalClassifier`` is the user-facing entry point (examples, serving,
+benchmarks). It dispatches to the paper-optimized implementations by default
+and can be forced onto the naive path (``optimized=False``) for exactness
+testing and the paper's standard-vs-optimized benchmark tables.
+
+    clf = ConformalClassifier(measure="knn", k=15, n_labels=2)
+    clf.fit(X, y)
+    p = clf.predict_pvalues(X_test)          # (m, l)
+    sets = clf.predict_set(X_test, eps=0.1)  # (m, l) bool
+
+Measures: "knn", "simplified_knn", "kde", "lssvm" (binary), "bootstrap".
+``InductiveConformalClassifier`` is the ICP baseline with the same surface.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import icp as icp_m
+from repro.core import pvalues as pv
+from repro.core.measures import bootstrap as boot_m
+from repro.core.measures import kde as kde_m
+from repro.core.measures import knn as knn_m
+from repro.core.measures import lssvm as lssvm_m
+
+MEASURES = ("knn", "simplified_knn", "kde", "lssvm", "bootstrap")
+
+
+def _as_f(x):
+    return jnp.asarray(x)
+
+
+@dataclass
+class ConformalClassifier:
+    """Full (transductive) CP classifier; exact optimized path by default."""
+
+    measure: str = "knn"
+    n_labels: int = 2
+    k: int = 15
+    h: float = 1.0  # KDE bandwidth
+    rho: float = 1.0  # LS-SVM regularizer
+    feature_map: str = "linear"  # LS-SVM phi
+    rff_dim: int = 128
+    B: int = 10  # bootstrap ensemble size
+    tree_depth: int = 5
+    optimized: bool = True
+    seed: int = 0
+    _state: Any = field(default=None, repr=False)
+    _fitdata: Any = field(default=None, repr=False)
+    _phi: Any = field(default=None, repr=False)
+
+    def __post_init__(self):
+        if self.measure not in MEASURES:
+            raise ValueError(
+                f"measure {self.measure!r} not in {MEASURES}")
+        if self.measure == "lssvm" and self.n_labels != 2:
+            raise ValueError("lssvm measure is binary (labels {-1,+1}); use "
+                             "one-vs-rest for more labels (paper Section 5)")
+
+    # -- fit ---------------------------------------------------------------
+
+    def fit(self, X, y) -> "ConformalClassifier":
+        X = _as_f(X)
+        y = jnp.asarray(y)
+        self._fitdata = (X, y)
+        if not self.optimized:
+            return self  # standard full CP has no training phase (Table 1)
+        if self.measure in ("knn", "simplified_knn"):
+            self._state = knn_m.fit(X, y.astype(jnp.int32), k=self.k)
+        elif self.measure == "kde":
+            self._state = kde_m.fit(
+                X, y.astype(jnp.int32), h=self.h, n_labels=self.n_labels)
+        elif self.measure == "lssvm":
+            phi, _ = lssvm_m.feature_map(
+                self.feature_map, X.shape[1], self.rff_dim, self.seed)
+            self._phi = phi
+            Y = self._to_pm1(y)
+            self._state = lssvm_m.fit(phi(X), Y, self.rho)
+        elif self.measure == "bootstrap":
+            self._state = boot_m.fit(
+                np.asarray(X), np.asarray(y), n_labels=self.n_labels,
+                B=self.B, depth=self.tree_depth, seed=self.seed)
+        return self
+
+    @staticmethod
+    def _to_pm1(y):
+        return (2 * y.astype(jnp.float32) - 1.0)
+
+    # -- predict -----------------------------------------------------------
+
+    def predict_pvalues(self, X_test) -> jnp.ndarray:
+        X_test = _as_f(X_test)
+        X, y = self._fitdata
+        simplified = self.measure == "simplified_knn"
+        if self.measure in ("knn", "simplified_knn"):
+            if self.optimized:
+                return knn_m.pvalues_optimized(
+                    self._state, X_test, k=self.k, simplified=simplified,
+                    n_labels=self.n_labels)
+            return knn_m.pvalues_standard(
+                X, y.astype(jnp.int32), X_test, k=self.k,
+                simplified=simplified, n_labels=self.n_labels)
+        if self.measure == "kde":
+            if self.optimized:
+                return kde_m.pvalues_optimized(
+                    self._state, X_test, h=self.h, p_dim=X.shape[1],
+                    n_labels=self.n_labels)
+            return kde_m.pvalues_standard(
+                X, y.astype(jnp.int32), X_test, h=self.h, p_dim=X.shape[1],
+                n_labels=self.n_labels)
+        if self.measure == "lssvm":
+            if self.optimized:
+                return lssvm_m.pvalues_optimized(
+                    self._state, self._phi(X_test))
+            phi, _ = lssvm_m.feature_map(
+                self.feature_map, X.shape[1], self.rff_dim, self.seed)
+            return lssvm_m.pvalues_standard(
+                phi(X), self._to_pm1(y), phi(X_test), rho=self.rho)
+        if self.measure == "bootstrap":
+            if self.optimized:
+                return jnp.asarray(
+                    boot_m.pvalues_optimized(self._state, np.asarray(X_test)))
+            return jnp.asarray(boot_m.pvalues_standard(
+                np.asarray(X), np.asarray(y), np.asarray(X_test),
+                n_labels=self.n_labels, B=self.B, depth=self.tree_depth,
+                seed=self.seed))
+        raise AssertionError(self.measure)
+
+    def predict_set(self, X_test, eps: float) -> jnp.ndarray:
+        return pv.prediction_sets(self.predict_pvalues(X_test), eps)
+
+    def predict_point(self, X_test) -> jnp.ndarray:
+        """Point prediction: argmax p-value (forced single label)."""
+        return jnp.argmax(self.predict_pvalues(X_test), axis=-1)
+
+
+@dataclass
+class InductiveConformalClassifier:
+    """ICP baseline (paper Section 2.3); same surface as the full CP class."""
+
+    measure: str = "knn"
+    n_labels: int = 2
+    k: int = 15
+    h: float = 1.0
+    rho: float = 1.0
+    feature_map: str = "linear"
+    rff_dim: int = 128
+    train_frac: float = 0.5
+    seed: int = 0
+    _state: Any = field(default=None, repr=False)
+    _phi: Any = field(default=None, repr=False)
+    _pdim: int = 0
+
+    def fit(self, X, y) -> "InductiveConformalClassifier":
+        X = _as_f(X)
+        y = jnp.asarray(y).astype(jnp.int32)
+        t = max(1, int(X.shape[0] * self.train_frac))
+        self._pdim = X.shape[1]
+        simplified = self.measure == "simplified_knn"
+        if self.measure in ("knn", "simplified_knn"):
+            self._state = icp_m.fit_knn(
+                X, y, k=self.k, simplified=simplified, t=t)
+        elif self.measure == "kde":
+            self._state = icp_m.fit_kde(
+                X, y, h=self.h, p_dim=X.shape[1], n_labels=self.n_labels, t=t)
+        elif self.measure == "lssvm":
+            phi, _ = lssvm_m.feature_map(
+                self.feature_map, X.shape[1], self.rff_dim, self.seed)
+            self._phi = phi
+            Y = 2 * y.astype(jnp.float32) - 1.0
+            self._state = icp_m.fit_lssvm(phi(X), Y, self.rho, t=t)
+        else:
+            raise ValueError(f"ICP measure {self.measure!r} unsupported")
+        return self
+
+    def predict_pvalues(self, X_test) -> jnp.ndarray:
+        X_test = _as_f(X_test)
+        simplified = self.measure == "simplified_knn"
+        if self.measure in ("knn", "simplified_knn"):
+            return icp_m.pvalues_knn(
+                self._state, X_test, k=self.k, simplified=simplified,
+                n_labels=self.n_labels)
+        if self.measure == "kde":
+            return icp_m.pvalues_kde(
+                self._state, X_test, h=self.h, p_dim=self._pdim,
+                n_labels=self.n_labels)
+        if self.measure == "lssvm":
+            return icp_m.pvalues_lssvm(self._state, self._phi(X_test))
+        raise AssertionError(self.measure)
+
+    def predict_set(self, X_test, eps: float) -> jnp.ndarray:
+        return pv.prediction_sets(self.predict_pvalues(X_test), eps)
+
+
+__all__ = ["ConformalClassifier", "InductiveConformalClassifier", "MEASURES"]

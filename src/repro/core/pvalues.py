@@ -1,0 +1,65 @@
+"""p-value machinery shared by every conformal predictor in the framework.
+
+A full-CP p-value for a candidate ``(x, y_hat)`` given training scores
+``alphas[i] = A((x_i,y_i); {(x,y_hat)} u Z \\ {(x_i,y_i)})`` and the candidate's
+own score ``alpha = A((x,y_hat); Z)`` is::
+
+    p = (#{i: alphas[i] >= alpha} + 1) / (n + 1)
+
+The ``+1`` counts the candidate itself (whose score trivially >= itself).
+Smoothed p-values randomize ties and make the p-value exactly uniform under
+exchangeability — required by the online exchangeability martingale.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pvalue(alphas: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
+    """p-value from per-training-example scores. Broadcasts over leading dims.
+
+    alphas: (..., n) training scores; alpha: (...) candidate score.
+    """
+    n = alphas.shape[-1]
+    count = jnp.sum(alphas >= alpha[..., None], axis=-1)
+    return (count + 1.0) / (n + 1.0)
+
+
+def smoothed_pvalue(
+    alphas: jnp.ndarray, alpha: jnp.ndarray, tau: jnp.ndarray
+) -> jnp.ndarray:
+    """Smoothed p-value: ties broken by tau ~ U[0,1]; exactly uniform."""
+    n = alphas.shape[-1]
+    gt = jnp.sum(alphas > alpha[..., None], axis=-1)
+    eq = jnp.sum(alphas == alpha[..., None], axis=-1)
+    return (gt + tau * (eq + 1.0)) / (n + 1.0)
+
+
+def prediction_sets(pvalues: jnp.ndarray, epsilon: float) -> jnp.ndarray:
+    """Boolean membership matrix (m, l): label in the set iff p > epsilon."""
+    return pvalues > epsilon
+
+
+def fuzziness(pvalues: jnp.ndarray) -> jnp.ndarray:
+    """Statistical-efficiency criterion (Vovk et al. 2016): sum of p-values
+    excluding the largest; lower is better. pvalues: (m, l) -> (m,)."""
+    return jnp.sum(pvalues, axis=-1) - jnp.max(pvalues, axis=-1)
+
+
+def coverage(pvalues: jnp.ndarray, y_true: jnp.ndarray, epsilon: float):
+    """Empirical coverage of the epsilon-prediction set and mean set size."""
+    sets = prediction_sets(pvalues, epsilon)
+    hit = jnp.take_along_axis(sets, y_true[:, None].astype(jnp.int32), axis=1)[:, 0]
+    return jnp.mean(hit.astype(jnp.float32)), jnp.mean(
+        jnp.sum(sets, axis=-1).astype(jnp.float32)
+    )
+
+
+def count_ge(alphas: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
+    """Partial count #{alphas >= alpha} (for sharded/distributed psum)."""
+    return jnp.sum((alphas >= alpha[..., None]).astype(jnp.int32), axis=-1)
+
+
+def pvalue_from_counts(counts: jnp.ndarray, n: int) -> jnp.ndarray:
+    return (counts + 1.0) / (n + 1.0)

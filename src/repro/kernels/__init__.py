@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the CP hot spots and the LM attention layer.
+
+Each kernel module ships pl.pallas_call + explicit BlockSpec VMEM tiling;
+ops.py is the jit dispatching wrapper and ref.py the pure-jnp oracle
+used by the per-kernel allclose sweeps in tests/.
+"""

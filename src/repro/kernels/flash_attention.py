@@ -1,0 +1,125 @@
+"""FlashAttention kernel (Pallas, TPU): online-softmax tiled attention.
+
+TPU-native adaptation: q/k/v tiles sized for VMEM residency with the (bq, bk)
+logits tile on the MXU; running max/denominator kept in f32 VMEM scratch
+across the sequential kv-grid dimension. Supports causal masking, sliding
+windows (gemma3 local layers, mixtral SWA, recurrentgemma local attention)
+and GQA (kv-head indexing in the BlockSpec index_map — repeated K/V are never
+materialized, which matters at kv=1). Fully-masked tiles are skipped with
+``pl.when`` (halves work for causal, and turns SWA cost from O(S^2) into
+O(S*W)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
+            scale, causal, window, softcap, bq, bk, sq, skv, nkv):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+    q_pos_min = iq * bq + (skv - sq)
+    q_pos_max = q_pos_min + bq - 1
+    k_pos_min = ik * bk
+
+    # tile-level skip: fully-masked (bq, bk) tiles do no work
+    live = True
+    if causal:
+        live = k_pos_min <= q_pos_max
+    if window is not None:
+        live = jnp.logical_and(live, k_pos_min + bk - 1 > q_pos_min - window)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qp = q_pos_min + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kp = k_pos_min + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kp < skv
+        if causal:
+            mask &= kp <= qp
+        if window is not None:
+            mask &= kp > qp - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc[...] = acc[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_s[...] = m_new
+
+    @pl.when(ik == nkv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_s[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "softcap", "block_q",
+                     "block_k", "interpret"),
+)
+def flash_attention(
+    q, k, v, *, causal: bool = True, window: int | None = None,
+    scale: float | None = None, softcap: float | None = None,
+    block_q: int = 512, block_k: int = 512,
+    interpret: bool = False,
+):
+    """q: (B, Sq, H, D); k, v: (B, Skv, Hkv, D) with H % Hkv == 0."""
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = H // Hkv
+    scale = scale if scale is not None else float(1.0 / (D ** 0.5))
+    bq, bk = min(block_q, Sq), min(block_k, Skv)
+
+    pad_q = (-Sq) % bq
+    pad_k = (-Skv) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nkv = qp.shape[1] // bq, kp.shape[1] // bk
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap,
+        bq=bq, bk=bk, sq=Sq, skv=Skv, nkv=nkv,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j: (b, j, h // rep, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j: (b, j, h // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :Sq]

@@ -1,0 +1,80 @@
+"""Dispatching wrappers for the Pallas kernels.
+
+On TPU the compiled Pallas kernels run; elsewhere (this CPU container, unit
+tests) the pure-jnp reference semantics from ``ref.py`` are used, with
+``REPRO_PALLAS_INTERPRET=1`` forcing the Pallas interpret path so the kernel
+bodies themselves are exercised end-to-end. float64 inputs (the CP exactness
+path under x64) always use the reference — the MXU has no f64.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+def sq_dists(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    """Squared Euclidean distance matrix; Pallas-tiled on TPU."""
+    if A.dtype == jnp.float64 or B.dtype == jnp.float64:
+        return _ref.sq_dists(A, B)
+    if _on_tpu() or _interpret():
+        from repro.kernels.pairwise_dist import pairwise_sq_dists
+
+        return pairwise_sq_dists(A, B, interpret=not _on_tpu()).astype(A.dtype)
+    return _ref.sq_dists(A, B)
+
+
+def kde_rowsums(A, B, y_A, y_B, h, exclude_diag=False):
+    if A.dtype == jnp.float64:
+        return _ref.kde_rowsums(A, B, y_A, y_B, h, exclude_diag)
+    if _on_tpu() or _interpret():
+        from repro.kernels.kde_score import kde_rowsums as _pallas
+
+        return _pallas(
+            A, B, y_A, y_B, h=float(h), exclude_diag=exclude_diag,
+            interpret=not _on_tpu(),
+        ).astype(A.dtype)
+    return _ref.kde_rowsums(A, B, y_A, y_B, h, exclude_diag)
+
+
+def cp_knn_counts(X, y, sum_same, kth_same, X_test, alpha, n_labels):
+    if X.dtype == jnp.float64:
+        return _ref.cp_knn_counts(X, y, sum_same, kth_same, X_test, alpha)
+    if _on_tpu() or _interpret():
+        from repro.kernels.cp_update import cp_knn_counts as _pallas
+
+        return _pallas(
+            X, y, sum_same, kth_same, X_test, alpha, n_labels=n_labels,
+            interpret=not _on_tpu(),
+        )
+    return _ref.cp_knn_counts(X, y, sum_same, kth_same, X_test, alpha)
+
+
+# past this many score elements per (batch, head), fall back to the chunked
+# online-softmax path off-TPU so 32k/500k sequences stay memory-bounded
+_DENSE_SCORE_LIMIT = 2048 * 2048
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    softcap=None):
+    if _on_tpu() or _interpret():
+        from repro.kernels.flash_attention import flash_attention as _pallas
+
+        return _pallas(q, k, v, causal=causal, window=window, scale=scale,
+                       softcap=softcap, interpret=not _on_tpu())
+    if q.shape[1] * k.shape[1] > _DENSE_SCORE_LIMIT:
+        return _ref.chunked_attention(q, k, v, causal=causal, window=window,
+                                      scale=scale, softcap=softcap)
+    return _ref.flash_attention(q, k, v, causal=causal, window=window,
+                                scale=scale, softcap=softcap)

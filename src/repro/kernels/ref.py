@@ -1,0 +1,162 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: each kernel's test sweeps shapes/dtypes and
+asserts allclose against these functions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sq_dists(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    """Squared Euclidean distances (m, n) between rows of A (m,p) and B (n,p)."""
+    a2 = jnp.sum(A * A, axis=-1, keepdims=True)
+    b2 = jnp.sum(B * B, axis=-1, keepdims=True)
+    return a2 + b2.T - 2.0 * (A @ B.T)
+
+
+def kde_rowsums(
+    A: jnp.ndarray, B: jnp.ndarray, y_A: jnp.ndarray, y_B: jnp.ndarray,
+    h: float, exclude_diag: bool = False,
+) -> jnp.ndarray:
+    """Masked Gaussian-kernel row sums: out[i] = sum_j K((A_i-B_j)/h) over
+    j with y_B[j] == y_A[i] (and j != i when exclude_diag)."""
+    d2 = sq_dists(A, B)
+    K = jnp.exp(-d2 / (2.0 * h * h))
+    mask = y_A[:, None] == y_B[None, :]
+    if exclude_diag:
+        m, n = d2.shape
+        mask = mask & ~jnp.eye(m, n, dtype=bool)
+    return jnp.sum(jnp.where(mask, K, 0.0), axis=-1)
+
+
+def cp_knn_counts(
+    X: jnp.ndarray, y: jnp.ndarray, sum_same: jnp.ndarray, kth_same: jnp.ndarray,
+    X_test: jnp.ndarray, alpha: jnp.ndarray,
+) -> jnp.ndarray:
+    """Fused simplified-k-NN CP update + p-value partial counts.
+
+    For each test point t and label l: counts[t, l] =
+      #{i : alpha_i(t, l) >= alpha[t, l]}, where alpha_i is the provisional
+    score sum_same[i], updated to sum_same[i] - kth_same[i] + d(x_i, x_t)
+    when the test point enters i's same-label neighbourhood.
+
+    alpha: (m, l) candidate scores. Returns int32 (m, l).
+    """
+    d = jnp.sqrt(jnp.maximum(sq_dists(X_test, X), 0.0))  # (m, n)
+    n_labels = alpha.shape[1]
+    labels = jnp.arange(n_labels, dtype=y.dtype)
+    same = y[None, :] == labels[:, None]  # (l, n)
+    upd = same[None] & (d[:, None, :] < kth_same[None, None, :])  # (m, l, n)
+    alphas = jnp.where(
+        upd, (sum_same - kth_same)[None, None, :] + d[:, None, :],
+        sum_same[None, None, :],
+    )
+    return jnp.sum(alphas >= alpha[:, :, None], axis=-1).astype(jnp.int32)
+
+
+def flash_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    causal: bool = True, window: int | None = None, scale: float | None = None,
+    softcap: float | None = None,
+) -> jnp.ndarray:
+    """Reference attention. q: (B, Sq, H, D); k, v: (B, Skv, Hkv, D).
+
+    GQA: H must be a multiple of Hkv. window: sliding-window size (keys
+    within [i-window+1, i] attend), applied with causal. softcap: gemma-style
+    tanh logit cap.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = H // Hkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(q.dtype)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = jnp.arange(Sq)[:, None] + (Skv - Sq)  # right-aligned
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+
+def chunked_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    causal: bool = True, window: int | None = None, scale: float | None = None,
+    softcap: float | None = None, block_q: int = 1024, block_k: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax attention with O(S * block) memory, pure jnp.
+
+    Same semantics as ``flash_attention``; the XLA-compiled analogue of the
+    Pallas kernel for long sequences off-TPU — a lax.map over query blocks,
+    each scanning key blocks with running (max, denom, acc) statistics. This
+    is what the 32k/500k dry-run cells lower to on the CPU container.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = H // Hkv
+    scale_f = scale if scale is not None else float(D ** -0.5)
+
+    pad_q = (-Sq) % block_q
+    pad_k = (-Skv) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // block_q, kp.shape[1] // block_k
+    kb = kp.reshape(B, nk, block_k, Hkv, D)
+    vb = vp.reshape(B, nk, block_k, Hkv, D)
+
+    def q_block(iq, q_blk):  # q_blk: (B, bq, H, D)
+        q_pos = (iq * block_q + jnp.arange(block_q))[:, None] + (Skv - Sq)
+
+        def kv_step(carry, inp):
+            m_run, l_run, acc = carry
+            ik, k_blk, v_blk = inp  # (B, bk, Hkv, D)
+            k_rep = jnp.repeat(k_blk, rep, axis=2)
+            v_rep = jnp.repeat(v_blk, rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_rep).astype(
+                jnp.float32) * scale_f
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            k_pos = (ik * block_k + jnp.arange(block_k))[None, :]
+            mask = k_pos < Skv
+            if causal:
+                mask = mask & (k_pos <= q_pos)
+            if window is not None:
+                mask = mask & (k_pos > q_pos - window)
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, v_rep.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, H, block_q), -1e30, jnp.float32),
+            jnp.zeros((B, H, block_q), jnp.float32),
+            jnp.zeros((B, H, block_q, D), jnp.float32),
+        )
+        # checkpoint per kv-step: the backward otherwise saves every
+        # (bq, bk) score tile AND boolean mask across the scan — gigabytes
+        # per layer at 4k+ context (the Pallas kernel's VJP recomputes
+        # tiles the same way on the real TPU)
+        (m_f, l_f, acc_f), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), init,
+            (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        out = acc_f / jnp.maximum(l_f, 1e-30)[..., None]
+        return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, bq, H, D)
+
+    qb = jnp.moveaxis(qp.reshape(B, nq, block_q, H, D), 1, 0)
+    out = jax.lax.map(lambda t: q_block(t[0], t[1]), (jnp.arange(nq), qb))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * block_q, H, D)
+    return out[:, :Sq]

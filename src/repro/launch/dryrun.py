@@ -1,0 +1,159 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init. 512 placeholder host devices back both production
+# meshes (the 16x16 single pod uses the first 256).
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape) cell, on the 16x16 single-pod and
+2x16x16 two-pod meshes:
+
+    lowered  = jax.jit(step).lower(*input_specs(...))   # sharding-annotated
+    compiled = lowered.compile()
+    compiled.memory_analysis()   # fits per-device HBM?
+    compiled.cost_analysis()     # FLOPs / bytes for the roofline table
+
+plus a collective-bytes sweep over the optimized HLO (all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute operand
+sizes) — the third roofline term. Results go to JSON for EXPERIMENTS.md.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    import jax
+
+    import repro.configs as cfgs
+    from repro.analysis.flops import flops_of
+    from repro.analysis.hlo import collective_bytes, count_ops, hbm_bytes
+    from repro.configs.base import shape_by_name
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import cell_fn_and_args
+
+    cfg = cfgs.get(arch)
+    if shape_name not in cfg.shapes:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "shape not applicable (DESIGN.md "
+                          "§Arch-applicability)"}
+
+    from repro.sharding.activation import activation_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind, fn, args, donate = cell_fn_and_args(cfg, shape_name, mesh)
+    t0 = time.time()
+    from repro.launch.steps import resolve_strategy
+    with mesh, activation_mesh(mesh, resolve_strategy(cfg, shape_name,
+                                                      mesh)):
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text)
+    ops = count_ops(hlo_text)
+    dev_bytes = hbm_bytes(hlo_text)
+    dev_bytes_flash = hbm_bytes(hlo_text, flash_adjusted=True)
+    with mesh, activation_mesh(mesh, resolve_strategy(cfg, shape_name,
+                                                      mesh)):
+        jflops = flops_of(fn, *args)  # global, scan-trip exact
+
+    shape = shape_by_name(shape_name)
+    tokens = shape.global_batch * (shape.seq_len if kind != "decode" else 1)
+    res = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": kind,
+        "status": "ok",
+        "flops_global": float(jflops["flops"]),
+        "device_hbm_bytes": float(dev_bytes),
+        "device_hbm_bytes_flash_adjusted": float(dev_bytes_flash),
+        "collective_bytes": {k: float(v) for k, v in coll.items()},
+        "hlo_ops": ops,
+        "xla_cost_flops_per_device_loopbody_once": float(
+            compiled.cost_analysis().get("flops", 0.0)),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        },
+        "tokens_per_step": tokens,
+        "n_params": cfg.n_params(),
+        "active_params": cfg.active_params(),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {res['mesh']}: OK "
+              f"flops={res['flops_global']:.3e} "
+              f"hbm/dev={dev_bytes:.3e}B "
+              f"coll/dev={sum(coll.values()):.3e}B "
+              f"temp/dev={res['memory']['temp_bytes']/2**30:.2f}GiB "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"  memory_analysis: {mem}")
+    return res
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    import repro.configs as cfgs
+    from repro.configs.base import LM_SHAPES
+
+    if args.all:
+        archs = list(cfgs.names())
+        shapes = [s.name for s in LM_SHAPES]
+    else:
+        archs = [args.arch]
+        shapes = [args.shape] if args.shape else [s.name for s in LM_SHAPES]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results, failed = [], 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(run_cell(arch, shape, multi_pod=mp))
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    failed += 1
+                    traceback.print_exc()
+                    results.append({
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "failed", "error": f"{type(e).__name__}: {e}",
+                    })
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] wrote {len(results)} cells to {args.out}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,258 @@
+"""The three lowered entry points: train_step, prefill_step, serve_step.
+
+``train_step`` is the full production step — loss, grads, clip, AdamW — so
+``compiled.memory_analysis()`` accounts for optimizer state and gradient
+buffers, and ``cost_analysis()`` sees forward+backward+update FLOPs.
+``serve_step`` is one-token decode against a preallocated KV/recurrent
+cache. ``prefill_step`` is a forward pass producing logits.
+
+``input_specs`` builds ShapeDtypeStruct stand-ins (weak-type-correct,
+sharding-annotated, zero allocation) for every (arch x shape) cell.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ArchConfig, ShapeSpec, shape_by_name
+from repro.models import lm
+from repro.optim import OptimizerConfig, apply_updates, init_opt_state
+from repro.sharding import batch_pspecs, cache_pspecs, param_pspecs
+
+
+# ---------------------------------------------------------------------------
+# step functions (pure; closed over cfg via partial)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptimizerConfig,
+                    microbatches: int = 1, mesh=None):
+    """Full production step: (micro-batched) grads -> clip -> AdamW.
+
+    ``microbatches > 1`` scans gradient accumulation over batch slices —
+    activation memory scales with the slice while the accumulator is one
+    param-sharded grad tree (the knob that fits 64k-token-per-device cells
+    into HBM; see EXPERIMENTS.md §Dry-run).
+
+    When ``mesh`` is given, per-microbatch grads AND the f32 accumulator
+    are constrained to the parameter sharding: without this the partitioner
+    materializes replicated f32 weight-grad all-reduces inside the
+    accumulation loop (EXPERIMENTS.md §Perf granite iteration 1)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: lm.train_step_loss(p, cfg, batch))(params)
+
+    if mesh is not None:
+        from repro.sharding import param_pspecs
+
+        def shard_like_params(tree):
+            specs = param_pspecs(tree, mesh)
+            return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                                specs)
+    else:
+        def shard_like_params(tree):
+            return tree
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+            grads = shard_like_params(grads)
+        else:
+            split = jax.tree.map(
+                lambda a: a.reshape((microbatches,
+                                     a.shape[0] // microbatches)
+                                    + a.shape[1:]), batch)
+
+            def body(acc, mb):
+                loss_a, g_a = acc
+                l, g = grads_of(params, mb)
+                g = shard_like_params(g)
+                g_a = jax.tree.map(
+                    lambda x, y: x + y.astype(x.dtype), g_a, g)
+                return (loss_a + l, shard_like_params(g_a)), None
+
+            init = (jnp.zeros((), jnp.float32),
+                    shard_like_params(jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params)))
+            (loss, grads), _ = jax.lax.scan(body, init, split)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        params, opt_state, stats = apply_updates(
+            params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, **stats}
+
+    return train_step
+
+
+def default_microbatches(cfg: ArchConfig, shape: ShapeSpec, mesh,
+                         target_tokens_per_device: int = 16_384) -> int:
+    """Largest power-of-2 split keeping per-device microbatch tokens at the
+    target while the per-microbatch batch still shards over dp."""
+    import numpy as np
+
+    from repro.sharding import dp_axes
+
+    axes = dp_axes(mesh)
+    if resolve_strategy(cfg, shape.name, mesh) == "fsdp":
+        axes = axes + ("model",)
+    dp = int(np.prod([mesh.shape[a] for a in axes]))
+    B, S = shape.global_batch, shape.seq_len
+    if B % dp:
+        return 1
+    b_dev = B // dp
+    k = 1
+    while (k < b_dev and (b_dev // k) * S > target_tokens_per_device
+           and b_dev % (2 * k) == 0):
+        k *= 2
+    return k
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        if cfg.is_encoder_decoder:
+            logits, _ = lm.forward_encdec(params, cfg, batch)
+        else:
+            logits, _, _ = lm.forward(params, cfg, batch)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, tokens, cache, index):
+        logits, new_cache = lm.decode_step(params, cfg, tokens, cache, index)
+        return logits, new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# shape stand-ins
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Abstract input batch for one workload shape (no device allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": _sds((B, 1), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        return {
+            "frames": _sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                           jnp.dtype(cfg.dtype)),
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+    if cfg.frontend == "vision_stub":
+        s_txt = S - cfg.n_frontend_tokens
+        return {
+            "tokens": _sds((B, s_txt), jnp.int32),
+            "patch_embeds": _sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                                 jnp.dtype(cfg.dtype)),
+            "labels": _sds((B, s_txt), jnp.int32),
+        }
+    return {"tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32)}
+
+
+def _attach(tree, spec_tree, mesh):
+    return jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, NamedSharding(mesh, sp)),
+        tree, spec_tree)
+
+
+def resolve_strategy(cfg: ArchConfig, shape_name: str, mesh) -> str:
+    """Per-cell strategy with a divisibility guard: fsdp needs the global
+    batch to split across EVERY mesh axis (e.g. granite's fsdp override
+    applies on the 256-chip pod but falls back to tp_sp on 512 chips)."""
+    import numpy as np
+
+    strategy = cfg.strategy_for(shape_name)
+    if strategy == "fsdp":
+        total = int(np.prod(list(mesh.shape.values())))
+        if shape_by_name(shape_name).global_batch % total:
+            return "tp_sp"
+    return strategy
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, mesh,
+                opt_cfg: OptimizerConfig | None = None):
+    """Sharded ShapeDtypeStructs for one (arch x shape) dry-run cell.
+
+    Returns (kind, args): train -> (params, opt_state, batch);
+    prefill -> (params, batch); decode -> (params, tokens, cache, index).
+    """
+    shape = shape_by_name(shape_name)
+    opt_cfg = opt_cfg or OptimizerConfig()
+
+    params = jax.eval_shape(
+        lambda: lm.init_lm(jax.random.PRNGKey(0), cfg))
+    pspecs = param_pspecs(params, mesh)
+    params = _attach(params, pspecs, mesh)
+
+    strategy = resolve_strategy(cfg, shape.name, mesh)
+    batch = batch_struct(cfg, shape)
+    bspecs = batch_pspecs(batch, mesh, strategy)
+    batch = _attach(batch, bspecs, mesh)
+
+    if shape.kind == "train":
+        opt_state = jax.eval_shape(
+            lambda: init_opt_state(params, opt_cfg))
+        ospecs = param_pspecs(opt_state, mesh)
+        opt_state = _attach(opt_state, ospecs, mesh)
+        return "train", (params, opt_state, batch)
+
+    if shape.kind == "prefill":
+        return "prefill", (params, batch)
+
+    # decode: preallocated cache of seq_len, one new token
+    cache = jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len))
+    cspecs = cache_pspecs(cache, mesh, resolve_strategy(cfg, shape.name,
+                                                        mesh))
+    cache = _attach(cache, cspecs, mesh)
+    index = _sds((), jnp.int32)
+    return "decode", (params, batch["tokens"], cache, index)
+
+
+def cell_fn_and_args(cfg: ArchConfig, shape_name: str, mesh,
+                     opt_cfg: OptimizerConfig | None = None,
+                     microbatches: int | None = None):
+    """(kind, fn, args, donate_argnums) for one (arch x shape) cell."""
+    kind, args = input_specs(cfg, shape_name, mesh, opt_cfg)
+    opt_cfg = opt_cfg or OptimizerConfig()
+    if kind == "train":
+        if microbatches is None:
+            microbatches = default_microbatches(
+                cfg, shape_by_name(shape_name), mesh,
+                target_tokens_per_device=cfg.microbatch_target_tokens)
+        return (kind, make_train_step(cfg, opt_cfg, microbatches, mesh),
+                args, (0, 1))
+    if kind == "prefill":
+        return kind, make_prefill_step(cfg), args, ()
+    return kind, make_serve_step(cfg), args, (2,)
+
+
+def lower_cell(cfg: ArchConfig, shape_name: str, mesh,
+               opt_cfg: OptimizerConfig | None = None, donate: bool = True):
+    """jit-lower one (arch x shape x mesh) cell. Returns the Lowered."""
+    from repro.sharding.activation import activation_mesh
+
+    kind, fn, args, donate_argnums = cell_fn_and_args(
+        cfg, shape_name, mesh, opt_cfg)
+    with mesh, activation_mesh(mesh, resolve_strategy(cfg, shape_name,
+                                                      mesh)):
+        return jax.jit(
+            fn, donate_argnums=donate_argnums if donate else ()).lower(*args)
+
+
+__all__ = ["make_train_step", "make_prefill_step", "make_serve_step",
+           "batch_struct", "input_specs", "lower_cell"]

@@ -1,0 +1,57 @@
+"""Training launcher.
+
+    python -m repro.launch.train --arch qwen2-1.5b --reduced \\
+        --steps 200 --batch 8 --seq-len 256 --ckpt-dir /tmp/ckpt
+
+``--reduced`` swaps in the smoke-scale config of the same family (the CPU
+container path); full-scale configs target the production mesh (see
+launch/dryrun.py for the compile-only proof). The trainer provides
+checkpoint/restart, preemption handling, straggler logging (runtime/).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--data-axis", type=int, default=1)
+    ap.add_argument("--model-axis", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    import repro.configs as cfgs
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import OptimizerConfig
+    from repro.runtime import Trainer, TrainerConfig
+
+    cfg = cfgs.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh(args.data_axis, args.model_axis)
+    tcfg = TrainerConfig(
+        steps=args.steps, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir, log_every=args.log_every, seed=args.seed,
+        batch=args.batch, seq_len=args.seq_len,
+        microbatches=args.microbatches)
+    ocfg = OptimizerConfig(peak_lr=args.lr, end_lr=args.lr / 10,
+                           warmup_steps=max(1, args.steps // 20),
+                           total_steps=args.steps)
+    out = Trainer(cfg, tcfg, mesh, ocfg).run()
+    print(f"[train] done: steps={out['stop_step']} "
+          f"loss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

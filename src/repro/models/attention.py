@@ -1,0 +1,258 @@
+"""Attention layers: GQA/MQA (+qk-norm, bias, sliding window, softcap), MLA.
+
+Three compute paths, selected by workload:
+
+* full-sequence (train/prefill): ``repro.kernels.ops.flash_attention`` — the
+  Pallas TPU kernel on device, a chunked online-softmax scan in pure jnp
+  elsewhere (keeps 32k+ prefill memory bounded at compile time too).
+* decode: one query position against a preallocated KV cache ring
+  (dense masked einsum — memory-bound, no kernel needed).
+* MLA (DeepSeek-V2): low-rank KV. Train uses the unabsorbed form (standard
+  MHA over decompressed K/V); decode uses the absorbed form, attending in
+  the 512-dim latent space so the cache is (kv_lora + rope) per token —
+  the architecture's reason to exist.
+
+Caches are plain dicts of arrays so they shard/checkpoint like params.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.models.common import apply_rope, dense_init, rms_norm, softcap
+from repro.sharding.activation import BATCH_AXES, constrain
+
+NEG_INF = -1e30
+
+# tensor-parallel layouts: heads shard over "model" (falling back to nothing
+# when the head count doesn't divide — MQA K/V stay replicated, the standard
+# Megatron treatment). These constraints are what stop the partitioner from
+# keeping sequence sharding through attention and replicating the weights
+# instead (EXPERIMENTS.md §Perf iteration 1).
+_HEADS_TP = (BATCH_AXES, None, "model", None)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig, dtype) -> dict:
+    d, h, kv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), dtype),
+        "wk": dense_init(ks[1], (d, kv, hd), dtype),
+        "wv": dense_init(ks[2], (d, kv, hd), dtype),
+        "wo": dense_init(ks[3], (h, hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def init_mla(key, cfg: ArchConfig, dtype) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, h, qk), dtype),
+        "wkv_a": dense_init(
+            ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wk_b": dense_init(ks[3], (m.kv_lora_rank, h, m.qk_nope_head_dim),
+                           dtype),
+        "wv_b": dense_init(ks[4], (m.kv_lora_rank, h, m.v_head_dim), dtype),
+        "wo": dense_init(ks[5], (h, m.v_head_dim, d), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# standard GQA attention
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p, x, cfg: ArchConfig, positions, theta):
+    # explicit Megatron-SP all-gather: replicate the sequence dim BEFORE the
+    # projections so the einsums keep the *weights* sharded (backward of
+    # this gather is the reduce-scatter; without it the partitioner gathers
+    # the weights instead and all-reduces full f32 weight grads). The
+    # optimization barrier stops the norm's f32 internals from fusing
+    # across the boundary — the gather must move bf16, not f32
+    # (EXPERIMENTS.md §Perf granite iteration 3).
+    x = jax.lax.optimization_barrier(constrain(x, (BATCH_AXES, None, None)))
+    q = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), _HEADS_TP)
+    k = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wk"]), _HEADS_TP)
+    v = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wv"]), _HEADS_TP)
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def attention_full(p, x, cfg: ArchConfig, *, positions, window: int = 0,
+                   causal: bool = True, theta: float = 10_000.0):
+    """Full-sequence attention (train / prefill). x: (B, S, D)."""
+    q, k, v = _project_qkv(p, x, cfg, positions, theta)
+    out = kops.flash_attention(
+        q, k, v, causal=causal, window=window or None,
+        softcap=cfg.attn_logit_softcap or None)
+    out = constrain(out, _HEADS_TP)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def attention_decode(p, x, cfg: ArchConfig, cache: dict, index,
+                     *, window: int = 0, theta: float = 10_000.0):
+    """One-token decode. x: (B, 1, D); cache k/v: (B, S_max, Kv, hd).
+
+    Returns (out (B,1,D), new_cache). ``index`` is the number of tokens
+    already in the cache (the new token's position).
+    """
+    B, _, _ = x.shape
+    S_max = cache["k"].shape[1]
+    pos = jnp.full((B, 1), index, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, pos, theta)
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, index, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, index, 0, 0))
+
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    rep = h // kv
+    hd = cfg.resolved_head_dim
+    qh = q.reshape(B, kv, rep, hd)  # fold group into q
+    logits = jnp.einsum("bgrk,bsgk->bgrs", qh.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * (hd ** -0.5)
+    logits = softcap(logits, cfg.attn_logit_softcap or None)
+    kpos = jnp.arange(S_max)
+    mask = kpos <= index
+    if window:
+        mask &= kpos > index - window
+    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrs,bsgk->bgrk", probs, v_cache.astype(jnp.float32))
+    out = out.reshape(B, 1, h, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_full(p, x, cfg: ArchConfig, *, positions,
+             theta: float = 10_000.0):
+    """Unabsorbed MLA for train/prefill: decompress K/V, run standard MHA."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    x = constrain(x, (BATCH_AXES, None, None))  # SP all-gather (see above)
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"],
+                  cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, theta)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv = rms_norm(ckv_full[..., :m.kv_lora_rank], p["kv_norm"],
+                    cfg.norm_eps)
+    k_rope = apply_rope(ckv_full[:, :, None, m.kv_lora_rank:], positions,
+                        theta)  # (B,S,1,rope) shared across heads
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"])
+
+    qk = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kk = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope,
+                                  (B, S, h, m.qk_rope_head_dim))], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    # pad v head dim up to qk head dim for the shared kernel, then slice
+    pad = qk.shape[-1] - v.shape[-1]
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    out = kops.flash_attention(qk, kk, vp, causal=True, scale=scale)
+    out = out[..., :m.v_head_dim]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_decode(p, x, cfg: ArchConfig, cache: dict, index,
+               *, theta: float = 10_000.0):
+    """Absorbed MLA decode: attend in the kv_lora latent space."""
+    m = cfg.mla
+    B = x.shape[0]
+    S_max = cache["c_kv"].shape[1]
+    pos = jnp.full((B, 1), index, dtype=jnp.int32)
+
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"],
+                  cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])  # (B,1,H,nope+rope)
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], pos, theta)
+    # absorb wk_b into the query: q_c = q_nope @ wk_b^T -> latent space
+    q_c = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"])  # (B,1,H,rank)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_new = rms_norm(ckv_full[..., :m.kv_lora_rank], p["kv_norm"],
+                     cfg.norm_eps)
+    kr_new = apply_rope(ckv_full[:, :, None, m.kv_lora_rank:], pos,
+                        theta)[:, :, 0, :]
+    c_cache = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, index, 0))
+    kr_cache = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, index, 0))
+
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    logits = (jnp.einsum("bshr,btr->bhst", q_c.astype(jnp.float32),
+                         c_cache.astype(jnp.float32))
+              + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                           kr_cache.astype(jnp.float32))) * scale
+    mask = jnp.arange(S_max) <= index
+    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out_c = jnp.einsum("bhst,btr->bshr", probs,
+                       c_cache.astype(jnp.float32))  # (B,1,H,rank)
+    out = jnp.einsum("bshr,rhk->bshk", out_c.astype(x.dtype), p["wv_b"])
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), {
+        "c_kv": c_cache, "k_rope": kr_cache}
+
+
+__all__ = ["init_attention", "init_mla", "init_kv_cache", "init_mla_cache",
+           "attention_full", "attention_decode", "mla_full", "mla_decode"]

@@ -1,0 +1,317 @@
+"""Transformer-family block assembly and the run-grouped layer stack.
+
+A model is a sequence of layers, each of one *kind*:
+
+    attn            full-attention transformer block (+ MoE if configured)
+    attn_local      sliding-window attention block
+    dense_ffn_attn  attention + dense FFN even in MoE models (deepseek L0)
+    rglru           Griffin recurrent block + MLP
+    mlstm / slstm   xLSTM blocks (self-contained, no separate FFN)
+
+Consecutive layers of the same kind form a *run*; a run's parameters are
+stacked on a leading axis and applied with lax.scan (remat'd per layer).
+This keeps compile time O(#runs), not O(#layers) — gemma3's 5-local:1-global
+pattern becomes alternating scans of 5 and 1; granite's 88 identical layers
+one scan of 88. Caches stack the same way and thread through the scan as
+per-layer xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_m
+from repro.models import mlp as mlp_m
+from repro.models import recurrent as rec_m
+from repro.models.common import layer_norm, rms_norm
+from repro.sharding.activation import (BATCH_AXES, constrain,
+                                       grad_compressed_boundary)
+
+ATTN_KINDS = ("attn", "attn_local", "dense_ffn_attn")
+
+# Megatron-style sequence parallelism: the residual stream between blocks
+# lives sharded (batch x dp, seq x model); XLA inserts the all-gather before
+# attention/MLP and the reduce-scatter after. This is what keeps the
+# 88-layer scan's saved carries at S/tp instead of S per device
+# (EXPERIMENTS.md §Dry-run: 200 GiB -> single-digit GiB on granite-34b).
+SP_SPEC = (BATCH_AXES, "model", None)
+
+
+def _norm_params(cfg: ArchConfig, dtype):
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((cfg.d_model,), dtype),
+                "b": jnp.zeros((cfg.d_model,), dtype)}
+    w = (jnp.zeros if cfg.rms_offset else jnp.ones)((cfg.d_model,), dtype)
+    return {"w": w}
+
+
+def apply_norm(p, x, cfg: ArchConfig):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps, offset=cfg.rms_offset)
+
+
+# ---------------------------------------------------------------------------
+# per-kind init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ArchConfig, kind: str, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {"ln1": _norm_params(cfg, dtype)}
+    if kind in ATTN_KINDS:
+        if cfg.mla is not None:
+            p["attn"] = attn_m.init_mla(ks[0], cfg, dtype)
+        else:
+            p["attn"] = attn_m.init_attention(ks[0], cfg, dtype)
+        p["ln2"] = _norm_params(cfg, dtype)
+        if cfg.moe.n_experts and kind != "dense_ffn_attn":
+            p["moe"] = mlp_m.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = mlp_m.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        if cfg.post_norms:
+            p["post_attn"] = _norm_params(cfg, dtype)
+            p["post_mlp"] = _norm_params(cfg, dtype)
+    elif kind == "rglru":
+        p["rec"] = rec_m.init_rglru_block(ks[0], cfg, dtype)
+        p["ln2"] = _norm_params(cfg, dtype)
+        p["mlp"] = mlp_m.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    elif kind == "mlstm":
+        p["block"] = rec_m.init_mlstm_block(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["block"] = rec_m.init_slstm_block(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                     dtype):
+    if kind in ATTN_KINDS:
+        if cfg.mla is not None:
+            return attn_m.init_mla_cache(cfg, batch, max_len, dtype)
+        eff = min(max_len, cfg.window) if kind == "attn_local" and cfg.window \
+            else max_len
+        # sliding-window layers never need more than `window` cache slots;
+        # keep full length for simplicity of indexing (ring buffers are a
+        # perf iteration, EXPERIMENTS.md §Perf)
+        del eff
+        return attn_m.init_kv_cache(cfg, batch, max_len, dtype)
+    if kind == "rglru":
+        return rec_m.init_rglru_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return rec_m.init_mlstm_state(cfg, batch, dtype)
+    if kind == "slstm":
+        return rec_m.init_slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# per-kind apply
+# ---------------------------------------------------------------------------
+
+
+def _attn_kwargs(cfg: ArchConfig, kind: str):
+    window = cfg.window if kind == "attn_local" else 0
+    theta = cfg.rope_theta_local if kind == "attn_local" else cfg.rope_theta
+    return window, theta
+
+
+def apply_block_full(p, x, cfg: ArchConfig, kind: str, positions,
+                     causal: bool = True):
+    """Train/prefill block application. Returns (x, aux, state_out)."""
+    aux = jnp.zeros((), jnp.float32)
+    state_out = None
+    x = constrain(x, SP_SPEC)
+    # bf16 + SP-layout pinned cotangent at the block boundary
+    # (EXPERIMENTS.md §Perf granite iteration 3)
+    x = grad_compressed_boundary(x, SP_SPEC)
+    if kind in ATTN_KINDS:
+        window, theta = _attn_kwargs(cfg, kind)
+        h = apply_norm(p["ln1"], x, cfg)
+        if cfg.mla is not None:
+            a = attn_m.mla_full(p["attn"], h, cfg, positions=positions,
+                                theta=theta)
+        else:
+            a = attn_m.attention_full(p["attn"], h, cfg, positions=positions,
+                                      window=window, causal=causal,
+                                      theta=theta)
+        if cfg.post_norms:
+            a = apply_norm(p["post_attn"], a, cfg)
+        x = x + a
+        h = apply_norm(p["ln2"], x, cfg)
+        if "moe" in p:
+            f, aux = mlp_m.moe(p["moe"], h, cfg)
+        else:
+            f = mlp_m.mlp(p["mlp"], h, cfg.act)
+        if cfg.post_norms:
+            f = apply_norm(p["post_mlp"], f, cfg)
+        x = x + f
+    elif kind == "rglru":
+        h = apply_norm(p["ln1"], x, cfg)
+        r, state_out = rec_m.rglru_block_full(p["rec"], h, cfg)
+        x = x + r
+        h = apply_norm(p["ln2"], x, cfg)
+        x = x + mlp_m.mlp(p["mlp"], h, cfg.act)
+    elif kind == "mlstm":
+        h = apply_norm(p["ln1"], x, cfg)
+        r, state_out = rec_m.mlstm_block_full(p["block"], h, cfg)
+        x = x + r
+    elif kind == "slstm":
+        h = apply_norm(p["ln1"], x, cfg)
+        r, state_out = rec_m.slstm_block_full(p["block"], h, cfg)
+        x = x + r
+    else:
+        raise ValueError(kind)
+    x = constrain(x, SP_SPEC)  # reduce-scatter back to the SP layout
+    return x, aux, state_out
+
+
+def apply_block_decode(p, x, cfg: ArchConfig, kind: str, cache, index):
+    """One-token decode. Returns (x, new_cache)."""
+    if kind in ATTN_KINDS:
+        window, theta = _attn_kwargs(cfg, kind)
+        h = apply_norm(p["ln1"], x, cfg)
+        if cfg.mla is not None:
+            a, cache = attn_m.mla_decode(p["attn"], h, cfg, cache, index,
+                                         theta=theta)
+        else:
+            a, cache = attn_m.attention_decode(p["attn"], h, cfg, cache,
+                                               index, window=window,
+                                               theta=theta)
+        if cfg.post_norms:
+            a = apply_norm(p["post_attn"], a, cfg)
+        x = x + a
+        h = apply_norm(p["ln2"], x, cfg)
+        if "moe" in p:
+            f, _ = mlp_m.moe(p["moe"], h, cfg, decode=True)
+        else:
+            f = mlp_m.mlp(p["mlp"], h, cfg.act)
+        if cfg.post_norms:
+            f = apply_norm(p["post_mlp"], f, cfg)
+        x = x + f
+    elif kind == "rglru":
+        h = apply_norm(p["ln1"], x, cfg)
+        r, cache = rec_m.rglru_block_step(p["rec"], h, cfg, cache)
+        x = x + r
+        h = apply_norm(p["ln2"], x, cfg)
+        x = x + mlp_m.mlp(p["mlp"], h, cfg.act)
+    elif kind == "mlstm":
+        h = apply_norm(p["ln1"], x, cfg)
+        r, cache = rec_m.mlstm_block_step(p["block"], h, cfg, cache)
+        x = x + r
+    elif kind == "slstm":
+        h = apply_norm(p["ln1"], x, cfg)
+        r, cache = rec_m.slstm_block_step(p["block"], h, cfg, cache)
+        x = x + r
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# runs: group consecutive identical kinds, scan each group
+# ---------------------------------------------------------------------------
+
+
+def pattern_runs(pattern) -> list[tuple[str, int]]:
+    runs = []
+    for kind in pattern:
+        if runs and runs[-1][0] == kind:
+            runs[-1] = (kind, runs[-1][1] + 1)
+        else:
+            runs.append((kind, 1))
+    return runs
+
+
+def init_layer_stack(key, cfg: ArchConfig, dtype) -> list:
+    """Per-run stacked params (leading axis = run length). The run *kinds*
+    are static — recovered from ``pattern_runs(cfg.pattern)`` at apply time —
+    so the returned list is a pure array pytree (jit/grad/checkpoint safe)."""
+    stacks = []
+    layer_idx = 0
+    for kind, length in pattern_runs(cfg.pattern):
+        keys = jax.random.fold_in(key, layer_idx)
+        run_keys = jax.random.split(keys, length)
+        params = jax.vmap(
+            lambda k: init_block(k, cfg, kind, dtype))(run_keys)
+        stacks.append(params)
+        layer_idx += length
+    return stacks
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def apply_stack_full(stacks, x, cfg: ArchConfig, positions,
+                     causal: bool = True, want_states: bool = False):
+    """Apply all runs (train/prefill). Returns (x, aux_total, states)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    states = []
+    for (kind, length), run_params in zip(pattern_runs(cfg.pattern), stacks):
+
+        def body(carry, layer_params, kind=kind):
+            h, aux = carry
+            h2, a, st = apply_block_full(layer_params, h, cfg, kind,
+                                         positions, causal)
+            out = st if want_states else None
+            return (h2, aux + a), out
+
+        if cfg.scan_layers:
+            (x, aux_total), st_stack = jax.lax.scan(
+                _remat(body, cfg), (x, aux_total), run_params)
+        else:
+            # unrolled (dry-run accounting mode): XLA cost_analysis counts
+            # while-loop bodies once, so faithful FLOP/collective totals
+            # need every layer in the entry computation
+            outs = []
+            for i in range(length):
+                layer = jax.tree.map(lambda a: a[i], run_params)
+                (x, aux_total), st = _remat(body, cfg)((x, aux_total), layer)
+                outs.append(st)
+            st_stack = (jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+                        if want_states else None)
+        states.append(st_stack)
+    return x, aux_total, states
+
+
+def apply_stack_decode(stacks, x, cfg: ArchConfig, caches, index):
+    """One-token decode through all runs. caches: list aligned with stacks."""
+    new_caches = []
+    for (kind, _), run_params, cache in zip(
+            pattern_runs(cfg.pattern), stacks, caches):
+
+        def body(h, layer_in, kind=kind):
+            layer_params, layer_cache = layer_in
+            h2, c2 = apply_block_decode(layer_params, h, cfg, kind,
+                                        layer_cache, index)
+            return h2, c2
+
+        x, c_out = jax.lax.scan(body, x, (run_params, cache))
+        new_caches.append(c_out)
+    return x, new_caches
+
+
+def init_stack_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    """Stacked caches, one entry per run."""
+    caches = []
+    for kind, length in pattern_runs(cfg.pattern):
+        one = init_block_cache(cfg, kind, batch, max_len, dtype)
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (length,) + a.shape), one))
+    return caches
+
+
+__all__ = ["init_block", "apply_block_full", "apply_block_decode",
+           "pattern_runs", "init_layer_stack", "apply_stack_full",
+           "apply_stack_decode", "init_stack_cache", "init_block_cache",
+           "apply_norm", "ATTN_KINDS"]

@@ -1,0 +1,102 @@
+"""Shared model-building primitives: init, norms, rotary embeddings, acts.
+
+Parameters are plain nested dicts of jnp arrays (no framework dependency) so
+the same trees flow through pjit sharding rules, the checkpointer, and the
+optimizer without adapters. Initializers take an explicit PRNG key path via
+``fold_in`` so layer stacking (vmap'd init) stays deterministic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Param = jnp.ndarray
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (scale defaults to 1/sqrt(fan_in))."""
+    import math
+
+    fan_in = math.prod(shape[:-1]) if len(shape) >= 2 else (
+        shape[0] if shape else 1)
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-6, *, offset: float = 0.0):
+    """RMSNorm in f32 accumulation; gemma-style (1 + w) via offset=1."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (offset + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "gelu_exact": lambda x: jax.nn.gelu(x, approximate=False),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    """Inverse frequencies for RoPE, (head_dim // 2,) f32."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """Rotate pairs (x[..., ::2], x[..., 1::2]).
+
+    x: (B, S, H, D); positions: (B, S) int32. f32 math, cast back.
+    """
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, d/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, dim: int):
+    """Standard sin/cos table (n_pos, dim) — whisper encoder positions."""
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+    idx = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    angle = pos / (10000.0 ** (2.0 * idx / dim))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def softcap(logits, cap: float | None):
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+__all__ = ["dense_init", "embed_init", "rms_norm", "layer_norm", "act_fn",
+           "rope_frequencies", "apply_rope", "sinusoidal_positions",
+           "softcap"]

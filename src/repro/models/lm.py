@@ -1,0 +1,351 @@
+"""Top-level language models: decoder-only LM and encoder-decoder (audio).
+
+Covers all ten assigned architectures through one code path driven by
+``ArchConfig``:
+
+* decoder-only (gemma3 / granite / qwen* / mixtral / deepseek / internvl2
+  backbone / recurrentgemma / xlstm): token embed (+ optional stub patch
+  embeds for the VLM), run-grouped layer stack, final norm, (tied) LM head.
+* encoder-decoder (whisper): stub frame embeddings -> non-causal encoder;
+  decoder = self-attn + cross-attn + FFN blocks with a separate cache.
+
+Exposes the three lowered entry points of the dry-run: ``train_step_loss``
+(the loss whose grad the launcher jits), ``prefill_logits`` and
+``decode_step``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_m
+from repro.models import blocks as blk
+from repro.models import mlp as mlp_m
+from repro.models.common import (apply_rope, dense_init, embed_init,
+                                 rms_norm, sinusoidal_positions)
+from repro.sharding.activation import BATCH_AXES, constrain
+
+Z_LOSS_COEF = 1e-4
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg: ArchConfig) -> dict:
+    dtype = _pdtype(cfg)
+    ks = jax.random.split(key, 8)
+    params = {
+        # 1/sqrt(d) scale keeps tied-head logits ~unit variance at init
+        # (gemma-style input embed_scale multiplies sqrt(d) back on lookup)
+        "embed": embed_init(ks[0], (cfg.padded_vocab_size, cfg.d_model),
+                            dtype) * (cfg.d_model ** -0.5),
+        "layers": blk.init_layer_stack(ks[1], cfg, dtype),
+        "final_norm": blk._norm_params(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            ks[2], (cfg.d_model, cfg.padded_vocab_size), dtype)
+    if cfg.is_encoder_decoder:
+        params["encoder"] = init_encoder(ks[3], cfg, dtype)
+        params["cross"] = init_cross_stack(ks[4], cfg, dtype)
+        # learned decoder positions sized for the largest assigned shape
+        # (32k prefill/decode) — the backbone spec governs, not whisper's
+        # 448-token context
+        params["pos_embed_dec"] = embed_init(
+            ks[5], (32_768, cfg.d_model), dtype) * 0.02
+    return params
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, cfg: ArchConfig, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    # batch over (pod, data); sequence over data when batch can't shard
+    x = constrain(x, (BATCH_AXES, None, None))
+    return x
+
+
+def lm_logits(params, cfg: ArchConfig, x):
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    if cfg.padded_vocab_size != cfg.vocab_size:
+        # pad ids exist only to make the vocab shardable; never predicted
+        pad_mask = jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, logits.ndim - 1) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype),
+                           logits)
+    # keep the f32-bound logits vocab-sharded: without this constraint the
+    # partitioner can replicate the (B, S, V) tensor (13+ GiB/device at 50k
+    # vocab before the CE reduce) — see EXPERIMENTS.md §Perf iteration 0
+    return constrain(logits, (BATCH_AXES, None, "model"))
+
+
+# ---------------------------------------------------------------------------
+# decoder-only forward
+# ---------------------------------------------------------------------------
+
+
+def hidden_forward(params, cfg: ArchConfig, batch, *,
+                   want_states: bool = False):
+    """Trunk only: embed -> layer stack -> final norm. Returns (h, aux,
+    states) with h: (B, S, D)."""
+    x = embed_tokens(params, cfg, batch["tokens"])
+    if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+        x = jnp.concatenate(
+            [batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, aux, states = blk.apply_stack_full(
+        params["layers"], x, cfg, positions, want_states=want_states)
+    x = blk.apply_norm(params["final_norm"], x, cfg)
+    return x, aux, states
+
+
+def forward(params, cfg: ArchConfig, batch, *, want_states: bool = False):
+    """batch: {"tokens": (B, S_txt)} (+ "patch_embeds" (B, Np, D) for vlm).
+
+    Returns (logits (B, S, V), aux, states).
+    """
+    x, aux, states = hidden_forward(params, cfg, batch,
+                                    want_states=want_states)
+    return lm_logits(params, cfg, x), aux, states
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Token CE with z-loss. Vocab-shard-friendly: the gold logit comes from
+    an iota==label masked reduce (partitions as a local reduce + tiny
+    all-reduce) instead of take_along_axis (which would all-gather the f32
+    logits across the vocab shards — a 13 GiB/device temp at 50k vocab)."""
+    logits_f = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits_f, axis=-1)
+    vocab_ids = jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, len(logits.shape) - 1)
+    gold = jnp.sum(
+        jnp.where(vocab_ids == labels[..., None], logits_f, 0.0), axis=-1)
+    nll = lse - gold
+    z = Z_LOSS_COEF * lse ** 2
+    per_tok = nll + z
+    if mask is None:
+        return jnp.mean(per_tok)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(per_tok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# past this many logit elements, the loss runs in sequence chunks so the
+# f32 (B, S, V) tensor never materializes (~1.6 GiB/device at 4k x 48k)
+_CE_CHUNK_LIMIT = 64 * 1024 * 1024
+_CE_CHUNK = 512
+
+
+def chunked_cross_entropy(params, cfg: ArchConfig, h, labels, mask=None):
+    """CE computed per sequence chunk; exact same value as the dense path."""
+    B, S, D = h.shape
+    c = min(_CE_CHUNK, S)
+    pad = (-S) % c
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask if mask is not None
+                       else jnp.ones((B, S), jnp.float32),
+                       ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    nc = (S + pad) // c
+    hc = jnp.moveaxis(h.reshape(B, nc, c, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nc, c), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(B, nc, c), 1, 0)
+
+    def chunk(carry, inp):
+        tot, cnt = carry
+        hx, lx, mx = inp
+        logits = lm_logits(params, cfg, hx).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        vocab_ids = jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, logits.ndim - 1)
+        gold = jnp.sum(
+            jnp.where(vocab_ids == lx[..., None], logits, 0.0), axis=-1)
+        per_tok = (lse - gold + Z_LOSS_COEF * lse ** 2) * mx
+        return (tot + jnp.sum(per_tok), cnt + jnp.sum(mx)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(chunk),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def train_step_loss(params, cfg: ArchConfig, batch):
+    """Scalar loss for one batch; grads of this are the train step."""
+    if cfg.is_encoder_decoder:
+        logits, aux = forward_encdec(params, cfg, batch)
+        return cross_entropy(logits, batch["labels"],
+                             batch.get("mask")) + aux
+    h, aux, _ = hidden_forward(params, cfg, batch)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+        # patch positions carry no next-token loss
+        npz = batch["patch_embeds"].shape[1]
+        h = h[:, npz:]
+    if h.shape[0] * h.shape[1] * cfg.padded_vocab_size > _CE_CHUNK_LIMIT:
+        return chunked_cross_entropy(params, cfg, h, labels, mask) + aux
+    return cross_entropy(lm_logits(params, cfg, h), labels, mask) + aux
+
+
+# ---------------------------------------------------------------------------
+# decoding
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    caches = blk.init_stack_cache(cfg, batch, max_len, _dtype(cfg))
+    if cfg.is_encoder_decoder:
+        n_enc = cfg.n_frontend_tokens or 1500
+        kv_shape = (cfg.n_layers, batch, n_enc, cfg.n_kv_heads,
+                    cfg.resolved_head_dim)
+        cross = {"k": jnp.zeros(kv_shape, _dtype(cfg)),
+                 "v": jnp.zeros(kv_shape, _dtype(cfg))}
+        return {"self": caches, "cross": cross}
+    return {"self": caches}
+
+
+def decode_step(params, cfg: ArchConfig, tokens, cache, index):
+    """One new token against a filled cache. tokens: (B, 1) int32.
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.is_encoder_decoder:
+        x = x + params["pos_embed_dec"][index][None, None, :].astype(x.dtype)
+        x, new_self = decode_encdec_body(params, cfg, x, cache, index)
+        new_cache = {"self": new_self, "cross": cache["cross"]}
+    else:
+        x, new_self = blk.apply_stack_decode(
+            params["layers"], x, cfg, cache["self"], index)
+        new_cache = {"self": new_self}
+    x = blk.apply_norm(params["final_norm"], x, cfg)
+    return lm_logits(params, cfg, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper-style; conv/audio frontend is a stub: the batch
+# carries precomputed frame embeddings)
+# ---------------------------------------------------------------------------
+
+
+def init_encoder(key, cfg: ArchConfig, dtype) -> list:
+    enc_cfg = cfg.replace(layer_pattern=("attn",) * cfg.n_encoder_layers,
+                          n_layers=cfg.n_encoder_layers)
+    return blk.init_layer_stack(key, enc_cfg, dtype)
+
+
+def init_cross_stack(key, cfg: ArchConfig, dtype) -> dict:
+    """Per-decoder-layer cross-attention params, stacked."""
+    def one(k):
+        ks = jax.random.split(k, 2)
+        return {"ln": blk._norm_params(cfg, dtype),
+                "attn": attn_m.init_attention(ks[0], cfg, dtype)}
+
+    keys = jax.random.split(key, cfg.n_layers)
+    return jax.vmap(one)(keys)
+
+
+def encode(params, cfg: ArchConfig, frames):
+    """frames: (B, T, D) stub embeddings -> encoder output (B, T, D)."""
+    x = frames.astype(_dtype(cfg))
+    T = x.shape[1]
+    x = x + sinusoidal_positions(T, cfg.d_model).astype(x.dtype)[None]
+    B = x.shape[0]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    x, _, _ = blk.apply_stack_full(params["encoder"], x, cfg, positions,
+                                   causal=False)
+    return x
+
+
+def _cross_attention(p, x, k, v, cfg: ArchConfig):
+    """x: (B, Sq, D) queries; k/v: (B, Skv, Kv, hd) from the encoder."""
+    from repro.kernels import ops as kops
+
+    h = blk.apply_norm(p["ln"], x, cfg)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"])
+    if cfg.qkv_bias:
+        q = q + p["attn"]["bq"]
+    out = kops.flash_attention(q, k, v, causal=False)
+    return x + jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"])
+
+
+def _cross_kv(p, enc_out, cfg: ArchConfig):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["attn"]["wv"])
+    if cfg.qkv_bias:
+        k = k + p["attn"]["bk"]
+        v = v + p["attn"]["bv"]
+    return k, v
+
+
+def forward_encdec(params, cfg: ArchConfig, batch):
+    """Full teacher-forced encoder-decoder pass (train/prefill)."""
+    enc_out = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    x = embed_tokens(params, cfg, tokens)
+    B, S, _ = x.shape
+    x = x + params["pos_embed_dec"][:S][None].astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    # decoder: self-attn block then cross-attn, per layer (scanned)
+    def body(h, layer_in):
+        self_p, cross_p = layer_in
+        h, _, _ = blk.apply_block_full(self_p, h, cfg, "attn", positions)
+        k, v = _cross_kv(cross_p, enc_out, cfg)
+        h = _cross_attention(cross_p, h, k, v, cfg)
+        return h, None
+
+    assert len(params["layers"]) == 1, "encdec decoder must be one run"
+    x, _ = jax.lax.scan(
+        blk._remat(body, cfg), x,
+        (params["layers"][0], params["cross"]))
+    x = blk.apply_norm(params["final_norm"], x, cfg)
+    return lm_logits(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+def prefill_cross_cache(params, cfg: ArchConfig, frames):
+    """Encoder pass + per-layer cross K/V (the decode-time constant)."""
+    enc_out = encode(params, cfg, frames)
+    k, v = jax.vmap(lambda p: _cross_kv(p, enc_out, cfg))(params["cross"])
+    return {"k": k, "v": v}  # stacked (L, B, T, Kv, hd)
+
+
+def decode_encdec_body(params, cfg: ArchConfig, x, cache, index):
+    def body(h, layer_in):
+        self_p, cross_p, self_c, ck, cv = layer_in
+        h, c2 = blk.apply_block_decode(self_p, h, cfg, "attn", self_c, index)
+        h = _cross_attention(cross_p, h, ck, cv, cfg)
+        return h, c2
+
+    x, new_self = jax.lax.scan(
+        body, x,
+        (params["layers"][0], params["cross"],
+         cache["self"][0], cache["cross"]["k"], cache["cross"]["v"]))
+    return x, [new_self]
+
+
+__all__ = ["init_lm", "forward", "forward_encdec", "train_step_loss",
+           "cross_entropy", "init_cache", "decode_step",
+           "prefill_cross_cache", "encode", "embed_tokens", "lm_logits"]

@@ -1,0 +1,229 @@
+"""Feed-forward layers: gated MLP (SwiGLU/GeGLU) and token-choice MoE.
+
+MoE uses sort-based capacity dispatch (no (T, E, C) one-hot tensors):
+
+    1. top-k router -> (T*K,) flat expert assignments,
+    2. stable argsort by expert id groups slots contiguously,
+    3. position-in-group ranks computed with a cumsum over sorted ids;
+       slots past the per-expert capacity C are dropped (standard
+       token-choice overflow semantics),
+    4. gather expert inputs to (E, C, D), run the batched expert FFN
+       (one einsum over the expert dim -> shards cleanly as EP or TP),
+    5. scatter-add weighted outputs back to token order.
+
+Compute is C*E = K*capacity_factor*T expert-token FFNs — the compiled
+FLOPs stay proportional to *active* parameters, which is what the roofline
+table's MODEL_FLOPS/HLO_FLOPs column checks. Expert tensors are (E, D, F)
+so the expert dim shards over "model" (EP, deepseek: 160 experts / 16) or
+F shards over "model" (TP, mixtral: 8 experts < 16-way axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import act_fn, dense_init
+from repro.sharding.activation import BATCH_AXES, constrain
+
+_HIDDEN_TP = (BATCH_AXES, None, "model")  # MLP hidden shards over model
+
+
+# ---------------------------------------------------------------------------
+# dense gated MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def mlp(p, x, act: str = "silu"):
+    x = constrain(x, (BATCH_AXES, None, None))  # SP all-gather
+    g = act_fn(act)(constrain(
+        jnp.einsum("bsd,df->bsf", x, p["w_gate"]), _HIDDEN_TP))
+    u = constrain(jnp.einsum("bsd,df->bsf", x, p["w_up"]), _HIDDEN_TP)
+    return jnp.einsum("bsf,fd->bsd", g * u, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# mixture of experts
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> dict:
+    mo = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, mo.n_experts), jnp.float32),
+        "w_gate": dense_init(ks[1], (mo.n_experts, d, mo.d_ff), dtype),
+        "w_up": dense_init(ks[2], (mo.n_experts, d, mo.d_ff), dtype),
+        "w_down": dense_init(ks[3], (mo.n_experts, mo.d_ff, d), dtype),
+    }
+    if mo.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, mo.d_ff * mo.n_shared_experts, dtype)
+    return p
+
+
+def moe_dense_mixture(p, x, cfg: ArchConfig):
+    """Small-E MoE without dispatch: every token runs EVERY expert; the
+    router's top-k mask weights the combine. E/K x more FLOPs than
+    dispatch, but zero gather/scatter/sort collectives — at E = 8 on a
+    256-chip mesh this trades a 732 s collective wall for 25 s of extra
+    MXU time (EXPERIMENTS.md §Perf mixtral iteration 2). Outputs are
+    exactly token-choice top-k (no capacity drops)."""
+    mo = cfg.moe
+    x = constrain(x, (BATCH_AXES, None, None))
+    B, S, D = x.shape
+    E, K = mo.n_experts, mo.n_experts_per_token
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+    # scatter normalized weights back to (B, S, E)
+    combine = jnp.sum(
+        jax.nn.one_hot(top_e, E, dtype=jnp.float32)
+        * top_p[..., None], axis=-2)  # (B, S, E)
+
+    density = jnp.mean(jax.nn.one_hot(top_e, E, dtype=jnp.float32),
+                       axis=(0, 1, 2)) * E
+    me = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.mean(density * me * E) * mo.router_aux_coef
+
+    hid_spec = (None, BATCH_AXES, None, "model")
+    g = act_fn(cfg.act)(constrain(
+        jnp.einsum("bsd,edf->ebsf", x, p["w_gate"]), hid_spec))
+    u = constrain(jnp.einsum("bsd,edf->ebsf", x, p["w_up"]), hid_spec)
+    y = jnp.einsum("ebsf,efd->ebsd", g * u, p["w_down"])  # (E, B, S, D)
+    out = jnp.einsum("ebsd,bse->bsd", y,
+                     combine.astype(y.dtype))
+    if mo.n_shared_experts:
+        out = out + mlp(p["shared"], x, cfg.act)
+    return out, aux
+
+
+def _dispatch_groups() -> int:
+    """Number of dispatch groups = data-parallel shards of the active mesh
+    (1 when no mesh context: tests/examples single-device path)."""
+    from repro.sharding.activation import _ACTIVE
+
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return 1
+    import math
+
+    axes = [a for a in ("pod", "data") if a in ctx["sizes"]]
+    return math.prod(ctx["sizes"][a] for a in axes)
+
+
+def moe(p, x, cfg: ArchConfig, decode: bool = False):
+    """Token-choice top-k MoE. x: (B, S, D) -> (out, aux_loss).
+
+    Dispatch is GROUP-LOCAL (groups = the data-parallel shards, the GShard
+    formulation): each group's tokens route into per-group expert slots
+    (G, E, C_g, D) whose G dim shards over data and E dim over model — so
+    the sort/gather/scatter never crosses shards, expert compute is local,
+    and the only cross-shard traffic is the output psum over "model"
+    (+ the slot transport XLA derives). Per-group capacity C_g = T_g*K*cf/E
+    (standard group-capacity semantics; with G=1 this reduces exactly to
+    global dispatch, which is what the CPU tests exercise)."""
+    mo = cfg.moe
+    part = (mo.partition_decode or mo.partition) if decode \
+        else mo.partition
+    if part == "dense":
+        return moe_dense_mixture(p, x, cfg)
+    x = constrain(x, (BATCH_AXES, None, None))  # SP all-gather
+    B, S, D = x.shape
+    G = _dispatch_groups()
+    if B % G:
+        G = 1
+    T = B * S // G  # tokens per group
+    K = mo.n_experts_per_token
+    E = mo.n_experts
+    cap = max(1, int(T * K * mo.capacity_factor / E))
+
+    xg = x.reshape(G, T, D)
+    xg = constrain(xg, (BATCH_AXES, None, None))
+    out_g, aux = _grouped_dispatch(p, xg, cfg, part, cap)
+    out = out_g.reshape(B, S, D)
+    if mo.n_shared_experts:
+        out = out + mlp(p["shared"], x, cfg.act)
+    return out, aux
+
+
+def _grouped_dispatch(p, xg, cfg: ArchConfig, part: str, cap: int):
+    """xg: (G, T, D) group-sharded tokens -> (G, T, D), aux."""
+    mo = cfg.moe
+    G, T, D = xg.shape
+    K, E = mo.n_experts_per_token, mo.n_experts
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)  # (G, T, K)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    density = jnp.mean(jax.nn.one_hot(top_e, E, dtype=jnp.float32),
+                       axis=(0, 1, 2)) * E
+    me = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.mean(density * me * E) * mo.router_aux_coef
+
+    def one_group(xt, tp, te):
+        return _dispatch_one(xt, tp, te, E, K, cap, xg.dtype)
+
+    slot_tok, slot_w = jax.vmap(one_group)(xg, top_p, top_e)
+    # (G, E*cap+1) each; expert inputs (G, E, cap, D)
+    pad = jnp.zeros((G, 1, D), xg.dtype)
+    xt_pad = jnp.concatenate([xg, pad], axis=1)
+    x_exp = jnp.take_along_axis(
+        xt_pad, slot_tok[:, :-1, None].astype(jnp.int32), axis=1)
+    x_exp = x_exp.reshape(G, E, cap, D)
+
+    exp_spec = ((BATCH_AXES, "model", None, None) if part == "ep"
+                else (BATCH_AXES, None, None, None))
+    hid_spec = ((BATCH_AXES, "model", None, None) if part == "ep"
+                else (BATCH_AXES, None, None, "model"))
+    x_exp = constrain(x_exp, exp_spec)
+
+    g_ = act_fn(cfg.act)(constrain(
+        jnp.einsum("gecd,edf->gecf", x_exp, p["w_gate"]), hid_spec))
+    u = constrain(jnp.einsum("gecd,edf->gecf", x_exp, p["w_up"]), hid_spec)
+    y_exp = constrain(
+        jnp.einsum("gecf,efd->gecd", g_ * u, p["w_down"]), exp_spec)
+
+    y_flat = y_exp.reshape(G, E * cap, D) * slot_w[:, :-1, None]
+    out = jnp.zeros((G, T + 1, D), xg.dtype)
+    out = jax.vmap(lambda o, st, yf: o.at[st].add(yf))(
+        out, slot_tok[:, :-1].astype(jnp.int32), y_flat)[:, :T]
+    return constrain(out, (BATCH_AXES, None, None)), aux
+
+
+def _dispatch_one(xt, top_p, top_e, E, K, cap, dtype):
+    """Per-group sort-based slot assignment. Returns (slot_tok, slot_w)
+    each (E*cap + 1,) with the last entry the trash slot."""
+    T = xt.shape[0]
+    flat_e = top_e.reshape(-1)  # (T*K,)
+    flat_w = top_p.reshape(-1).astype(dtype)
+    flat_tok = jnp.repeat(jnp.arange(T), K)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # rank within expert bucket: global position minus prior-bucket sizes
+    counts = jnp.bincount(flat_e, length=E)
+    bucket_start = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * K) - bucket_start[sorted_e]
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_e * cap + rank, E * cap)  # E*cap = trash
+    slot_tok = jnp.full((E * cap + 1,), T, dtype=jnp.int32)
+    slot_tok = slot_tok.at[slot].set(flat_tok[order].astype(jnp.int32))
+    slot_w = jnp.zeros((E * cap + 1,), dtype).at[slot].set(flat_w[order])
+    return slot_tok, slot_w
+
+
+__all__ = ["init_mlp", "mlp", "init_moe", "moe", "moe_dense_mixture"]

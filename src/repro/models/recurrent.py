@@ -1,0 +1,466 @@
+"""Recurrent / SSM-family blocks: RG-LRU (RecurrentGemma), mLSTM, sLSTM.
+
+TPU adaptation notes (DESIGN.md §hardware):
+
+* RG-LRU is a *diagonal* linear recurrence -> chunked evaluation: lax.scan
+  over chunks carrying the hidden state, jax.lax.associative_scan within a
+  chunk. Memory stays O(B * chunk * W) while the sequential depth drops from
+  S to S/chunk (the Griffin paper's own TPU strategy).
+* mLSTM uses the stabilized *chunkwise* form: intra-chunk quadratic matmuls
+  (MXU-friendly) + an inter-chunk (C, n, m) carry — the linear-attention
+  trick that makes the 500k-token cell sub-quadratic.
+* sLSTM has a non-linear state->gate dependency, so it is inherently
+  sequential: lax.scan over time with per-head recurrent matrices. This is
+  the architecture's own constraint, not an implementation shortcut.
+
+All blocks expose (full-sequence, decode-step) pairs with a carried state
+dict, mirroring the KV-cache interface of the attention layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import dense_init
+
+_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# temporal (causal, depthwise) conv1d
+# ---------------------------------------------------------------------------
+
+
+def init_conv1d(key, width: int, channels: int, dtype) -> dict:
+    return {
+        "w": dense_init(key, (width, channels), dtype, scale=width ** -0.5),
+        "b": jnp.zeros((channels,), dtype),
+    }
+
+
+def conv1d_full(p, x):
+    """Causal depthwise conv. x: (B, S, C)."""
+    width = p["w"].shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        shift = width - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi * p["w"][i]
+    return out + p["b"]
+
+
+def conv1d_step(p, x_t, state):
+    """x_t: (B, 1, C); state: (B, width-1, C) past inputs."""
+    width = p["w"].shape[0]
+    window = jnp.concatenate([state, x_t], axis=1)  # (B, width, C)
+    y = jnp.einsum("bwc,wc->bc", window, p["w"]) + p["b"]
+    return y[:, None, :], window[:, -(width - 1):, :]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+
+def init_rglru_block(key, cfg: ArchConfig, dtype) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 8)
+    # Lambda init so a = sigmoid(lam)^c covers [0.9, 0.999] (Griffin init)
+    c = 8.0
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / c) / (1.0 - u ** (1.0 / c)))
+    return {
+        "w_in": dense_init(ks[0], (d, w), dtype),  # recurrent branch in-proj
+        "w_gate_in": dense_init(ks[1], (d, w), dtype),  # gate branch in-proj
+        "conv": init_conv1d(ks[2], cfg.conv1d_width, w, dtype),
+        "w_rg": dense_init(ks[3], (w, w), dtype),  # recurrence gate
+        "b_rg": jnp.zeros((w,), dtype),
+        "w_ig": dense_init(ks[4], (w, w), dtype),  # input gate
+        "b_ig": jnp.zeros((w,), dtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[6], (w, d), dtype),
+    }
+
+
+def _rglru_scan(log_a, gx, h0):
+    """Diagonal linear recurrence h_t = a_t h_{t-1} + gx_t, chunked.
+
+    log_a, gx: (B, S, W); h0: (B, W). Returns (h_seq, h_last)."""
+    B, S, W = gx.shape
+    chunk = min(_CHUNK, S)
+    pad = (-S) % chunk
+    if pad:
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        gx = jnp.pad(gx, ((0, 0), (0, pad), (0, 0)))
+    n_chunks = (S + pad) // chunk
+    la = log_a.reshape(B, n_chunks, chunk, W).transpose(1, 0, 2, 3)
+    gg = gx.reshape(B, n_chunks, chunk, W).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, inp):
+        la_c, g_c = inp  # (B, chunk, W)
+
+        def op(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 + a2, b2 + jnp.exp(a2) * b1
+
+        la_cum, b_cum = jax.lax.associative_scan(op, (la_c, g_c), axis=1)
+        h_seq = jnp.exp(la_cum) * h[:, None, :] + b_cum
+        return h_seq[:, -1, :], h_seq
+
+    h_last, hs = jax.lax.scan(chunk_step, h0, (la, gg))
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, n_chunks * chunk, W)[:, :S]
+    return hs, h_last
+
+
+def rglru_block_full(p, x, cfg: ArchConfig, state=None):
+    """Full-sequence Griffin recurrent block. x: (B, S, D)."""
+    B, S, _ = x.shape
+    w = cfg.lru_width
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate_in"]))
+    u_raw = jnp.einsum("bsd,dw->bsw", x, p["w_in"])
+    u = conv1d_full(p["conv"], u_raw)
+
+    r = jax.nn.sigmoid(
+        (jnp.einsum("bsw,wv->bsv", u, p["w_rg"]) + p["b_rg"])
+        .astype(jnp.float32))
+    i = jax.nn.sigmoid(
+        (jnp.einsum("bsw,wv->bsv", u, p["w_ig"]) + p["b_ig"])
+        .astype(jnp.float32))
+    c = 8.0
+    log_a = -c * jax.nn.softplus(p["lam"])[None, None, :] * r  # (B,S,W) f32
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gx = beta * (i * u.astype(jnp.float32))
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((B, w), jnp.float32))
+    hs, h_last = _rglru_scan(log_a, gx, h0)
+    y = jnp.einsum("bsw,wd->bsd", (hs.astype(x.dtype) * gate), p["w_out"])
+    # conv state for a subsequent decode phase: last width-1 raw inputs
+    cw = cfg.conv1d_width - 1
+    conv_state = jnp.pad(u_raw, ((0, 0), (cw, 0), (0, 0)))[:, S:S + cw]
+    return y, {"h": h_last, "conv": conv_state}
+
+
+def init_rglru_state(cfg: ArchConfig, batch: int, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, cfg.lru_width),
+                          dtype),
+    }
+
+
+def rglru_block_step(p, x_t, cfg: ArchConfig, state):
+    """One decode step. x_t: (B, 1, D); state: {"h", "conv"}."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x_t, p["w_gate_in"]))
+    u = jnp.einsum("bsd,dw->bsw", x_t, p["w_in"])
+    u, conv_state = conv1d_step(p["conv"], u, state["conv"])
+
+    r = jax.nn.sigmoid(
+        (jnp.einsum("bsw,wv->bsv", u, p["w_rg"]) + p["b_rg"])
+        .astype(jnp.float32))
+    i = jax.nn.sigmoid(
+        (jnp.einsum("bsw,wv->bsv", u, p["w_ig"]) + p["b_ig"])
+        .astype(jnp.float32))
+    log_a = -8.0 * jax.nn.softplus(p["lam"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    h = (a[:, 0] * state["h"]
+         + (beta * (i * u.astype(jnp.float32)))[:, 0])
+    y = jnp.einsum("bsw,wd->bsd", (h[:, None].astype(x_t.dtype) * gate),
+                   p["w_out"])
+    return y, {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block), stabilized chunkwise form
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm_block(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    di = int(d * cfg.mlstm_proj_factor)
+    nh = cfg.n_heads
+    ks = jax.random.split(key, 10)
+    return {
+        "w_up": dense_init(ks[0], (d, di), dtype),
+        "w_gate": dense_init(ks[1], (d, di), dtype),
+        "conv": init_conv1d(ks[2], cfg.conv1d_width, di, dtype),
+        "wq": dense_init(ks[3], (di, di), dtype),
+        "wk": dense_init(ks[4], (di, di), dtype),
+        "wv": dense_init(ks[5], (di, di), dtype),
+        "w_if": dense_init(ks[6], (di, 2 * nh), jnp.float32),
+        "b_if": jnp.concatenate([
+            jnp.zeros((nh,), jnp.float32),  # input gate bias
+            jnp.linspace(3.0, 6.0, nh)]),  # forget gate bias (open)
+        "skip": jnp.ones((di,), dtype),  # learnable conv skip scale
+        "w_down": dense_init(ks[7], (di, d), dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, carry):
+    """One stabilized chunk. q/k/v: (B, H, L, Dh); gates: (B, H, L).
+
+    carry: (C (B,H,Dh,Dh), n (B,H,Dh), m (B,H)). Returns (h, new_carry).
+    """
+    B, H, L, Dh = q.shape
+    scale = Dh ** -0.5
+    b = jnp.cumsum(log_f, axis=-1)  # (B,H,L) inclusive cumulative log f
+    C_p, n_p, m_p = carry
+
+    # intra-chunk log weights D[t,s] = b_t - b_s + log_i_s  (s <= t)
+    Dm = b[..., :, None] - b[..., None, :] + log_i[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    Dm = jnp.where(mask, Dm, -jnp.inf)
+    m_intra = jnp.max(Dm, axis=-1)  # (B,H,L)
+    m_inter = b + m_p[..., None]
+    m_t = jnp.maximum(jnp.maximum(m_intra, m_inter), -1e30)
+
+    S = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale  # (B,H,L,L)
+    W = jnp.exp(Dm - m_t[..., None])
+    h_num = jnp.einsum("bhts,bhsd->bhtd", S * W, v)
+    n_vec = jnp.einsum("bhts,bhsd->bhtd", W, k)
+
+    inter_w = jnp.exp(m_inter - m_t)[..., None]
+    h_num = h_num + inter_w * jnp.einsum("bhde,bhte->bhtd", C_p, q) * scale
+    n_vec = n_vec + inter_w * n_p[..., None, :]
+
+    qn = jnp.einsum("bhtd,bhtd->bht", q, n_vec) * scale
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))
+    h = h_num / denom[..., None]
+
+    # carry update
+    bL = b[..., -1]  # (B,H)
+    m_new = jnp.maximum(bL + m_p, jnp.max(bL[..., None] - b + log_i, axis=-1))
+    w_s = jnp.exp(bL[..., None] - b + log_i - m_new[..., None])  # (B,H,L)
+    C_new = (jnp.exp(bL + m_p - m_new)[..., None, None] * C_p
+             + jnp.einsum("bhs,bhsd,bhse->bhde", w_s, v, k))
+    n_new = (jnp.exp(bL + m_p - m_new)[..., None] * n_p
+             + jnp.einsum("bhs,bhsd->bhd", w_s, k))
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_block_full(p, x, cfg: ArchConfig, state=None):
+    """Full-sequence mLSTM block. x: (B, S, D)."""
+    B, S, d = x.shape
+    di = int(d * cfg.mlstm_proj_factor)
+    nh = cfg.n_heads
+    dh = di // nh
+
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    z = jnp.einsum("bsd,de->bse", x, p["w_gate"])
+    xc = jax.nn.silu(conv1d_full(p["conv"], up))
+
+    def heads(t):
+        return t.reshape(B, S, nh, dh).transpose(0, 2, 1, 3)
+
+    q = heads(jnp.einsum("bse,ef->bsf", xc, p["wq"])).astype(jnp.float32)
+    k = heads(jnp.einsum("bse,ef->bsf", xc, p["wk"])).astype(jnp.float32)
+    v = heads(jnp.einsum("bse,ef->bsf", up, p["wv"])).astype(jnp.float32)
+    gif = jnp.einsum("bse,eg->bsg", xc.astype(jnp.float32), p["w_if"]) \
+        + p["b_if"]
+    log_i = gif[..., :nh].transpose(0, 2, 1)  # (B,H,S) pre-activations
+    log_f = jax.nn.log_sigmoid(gif[..., nh:]).transpose(0, 2, 1)
+
+    chunk = min(_CHUNK, S)
+    pad = (-S) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, 0), (0, pad)),
+                        constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, 0), (0, pad)))
+    nc = (S + pad) // chunk
+
+    def reshape_chunks(t, feat):
+        if feat:
+            return t.reshape(B, nh, nc, chunk, dh).transpose(2, 0, 1, 3, 4)
+        return t.reshape(B, nh, nc, chunk).transpose(2, 0, 1, 3)
+
+    if state is None:
+        carry = (jnp.zeros((B, nh, dh, dh), jnp.float32),
+                 jnp.zeros((B, nh, dh), jnp.float32),
+                 jnp.full((B, nh), -1e30, jnp.float32))
+    else:
+        carry = (state["C"], state["n"], state["m"])
+
+    def step(c, inp):
+        qc, kc, vc, lic, lfc = inp
+        h, c2 = _mlstm_chunk(qc, kc, vc, lic, lfc, c)
+        return c2, h
+
+    carry, hs = jax.lax.scan(
+        step, carry,
+        (reshape_chunks(q, True), reshape_chunks(k, True),
+         reshape_chunks(v, True), reshape_chunks(log_i, False),
+         reshape_chunks(log_f, False)))
+    hs = hs.transpose(1, 2, 0, 3, 4).reshape(B, nh, nc * chunk, dh)
+    hs = hs[:, :, :S].transpose(0, 2, 1, 3).reshape(B, S, di)
+
+    out = (hs.astype(x.dtype) + p["skip"] * xc) * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", out, p["w_down"])
+    cw = cfg.conv1d_width - 1
+    conv_state = jnp.pad(up, ((0, 0), (cw, 0), (0, 0)))[:, S:S + cw]
+    return y, {"C": carry[0], "n": carry[1], "m": carry[2],
+               "conv": conv_state}
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int, dtype):
+    di = int(cfg.d_model * cfg.mlstm_proj_factor)
+    nh = cfg.n_heads
+    dh = di // nh
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, di), dtype),
+    }
+
+
+def mlstm_block_step(p, x_t, cfg: ArchConfig, state):
+    """One decode step with O(1) state. x_t: (B, 1, D)."""
+    B, _, d = x_t.shape
+    di = int(d * cfg.mlstm_proj_factor)
+    nh = cfg.n_heads
+    dh = di // nh
+
+    up = jnp.einsum("bsd,de->bse", x_t, p["w_up"])
+    z = jnp.einsum("bsd,de->bse", x_t, p["w_gate"])
+    uc, conv_state = conv1d_step(p["conv"], up, state["conv"])
+    xc = jax.nn.silu(uc)
+
+    def heads(t):
+        return t.reshape(B, nh, dh)
+
+    q = heads(jnp.einsum("bse,ef->bsf", xc, p["wq"])[:, 0]).astype(jnp.float32)
+    k = heads(jnp.einsum("bse,ef->bsf", xc, p["wk"])[:, 0]).astype(jnp.float32)
+    v = heads(jnp.einsum("bse,ef->bsf", up, p["wv"])[:, 0]).astype(jnp.float32)
+    gif = jnp.einsum("be,eg->bg", xc[:, 0].astype(jnp.float32), p["w_if"]) \
+        + p["b_if"]
+    log_i = gif[:, :nh]
+    log_f = jax.nn.log_sigmoid(gif[:, nh:])
+
+    C_p, n_p, m_p = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(log_f + m_p, log_i)
+    fw = jnp.exp(log_f + m_p - m_new)[..., None]
+    iw = jnp.exp(log_i - m_new)[..., None]
+    C = fw[..., None] * C_p + iw[..., None] * jnp.einsum(
+        "bhd,bhe->bhde", v, k)
+    n = fw * n_p + iw * k
+    scale = dh ** -0.5
+    h_num = jnp.einsum("bhde,bhe->bhd", C, q) * scale
+    qn = jnp.einsum("bhd,bhd->bh", q, n) * scale
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    h = (h_num / denom[..., None]).reshape(B, 1, di)
+
+    out = (h.astype(x_t.dtype) + p["skip"] * xc) * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", out, p["w_down"])
+    return y, {"C": C, "n": n, "m": m_new, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory block) — inherently sequential
+# ---------------------------------------------------------------------------
+
+
+def init_slstm_block(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    dff = int(d * cfg.slstm_proj_factor) * 2
+    ks = jax.random.split(key, 8)
+    return {
+        "w_zifo": dense_init(ks[0], (d, 4 * d), dtype),
+        # per-head recurrent matrices (block-diagonal recurrence)
+        "r_zifo": dense_init(ks[1], (nh, dh, 4 * dh), dtype,
+                             scale=dh ** -0.5),
+        "b_zifo": jnp.concatenate([
+            jnp.zeros((2 * d,), jnp.float32),
+            jnp.ones((d,), jnp.float32) * 3.0,  # forget bias open
+            jnp.zeros((d,), jnp.float32)]),
+        "w_ff1": dense_init(ks[2], (d, dff), dtype),
+        "w_ff2": dense_init(ks[3], (dff // 2, d), dtype),
+    }
+
+
+def _slstm_gates(p, x_t, h_prev, nh, dh):
+    """x_t: (B, D); h_prev: (B, H, Dh) -> z, i~, f~, o~ each (B, H, Dh)."""
+    B, d = x_t.shape
+    wx = jnp.einsum("bd,de->be", x_t, p["w_zifo"])  # (B, 4D)
+    rh = jnp.einsum("bhd,hde->bhe", h_prev, p["r_zifo"])  # (B, H, 4Dh)
+    wx = wx.reshape(B, 4, nh, dh).transpose(0, 2, 1, 3)  # (B,H,4,Dh)
+    rh = rh.reshape(B, nh, 4, dh)
+    g = (wx + rh).astype(jnp.float32).transpose(0, 2, 1, 3) \
+        + p["b_zifo"].reshape(4, nh, dh)
+    return g[:, 0], g[:, 1], g[:, 2], g[:, 3]  # (B,H,Dh) each
+
+
+def _slstm_step(p, x_t, st, nh, dh):
+    c, n, h, m = st
+    z, it, ft, ot = _slstm_gates(p, x_t, h, nh, dh)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(ot)
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m, it)
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int):
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z - 1e30}
+
+
+def slstm_block_full(p, x, cfg: ArchConfig, state=None):
+    """Sequential scan over time. x: (B, S, D)."""
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    if state is None:
+        st = init_slstm_state(cfg, B)
+    else:
+        st = state
+    init = (st["c"], st["n"], st["h"], st["m"])
+
+    def step(carry, x_t):
+        new = _slstm_step(p, x_t, carry, nh, dh)
+        return new, new[2]
+
+    (c, n, h, m), hs = jax.lax.scan(step, init, x.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    # GLU feed-forward (proj factor 4/3, paired gates)
+    ff = jnp.einsum("bsd,de->bse", hs, p["w_ff1"])
+    u, g = jnp.split(ff, 2, axis=-1)
+    y = jnp.einsum("bse,ed->bsd", u * jax.nn.gelu(g), p["w_ff2"])
+    return y, {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_block_step(p, x_t, cfg: ArchConfig, state):
+    B = x_t.shape[0]
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    st = (state["c"], state["n"], state["h"], state["m"])
+    c, n, h, m = _slstm_step(p, x_t[:, 0], st, nh, dh)
+    hs = h.reshape(B, 1, cfg.d_model).astype(x_t.dtype)
+    ff = jnp.einsum("bsd,de->bse", hs, p["w_ff1"])
+    u, g = jnp.split(ff, 2, axis=-1)
+    y = jnp.einsum("bse,ed->bsd", u * jax.nn.gelu(g), p["w_ff2"])
+    return y, {"c": c, "n": n, "h": h, "m": m}
+
+
+__all__ = [
+    "init_conv1d", "conv1d_full", "conv1d_step",
+    "init_rglru_block", "rglru_block_full", "rglru_block_step",
+    "init_rglru_state",
+    "init_mlstm_block", "mlstm_block_full", "mlstm_block_step",
+    "init_mlstm_state",
+    "init_slstm_block", "slstm_block_full", "slstm_block_step",
+    "init_slstm_state",
+]

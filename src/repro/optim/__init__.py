@@ -1,0 +1,6 @@
+"""Optimizer substrate: AdamW / factored moments, schedules, clipping."""
+from repro.optim.adamw import (OptimizerConfig, apply_updates, global_norm,
+                               init_opt_state, lr_schedule)
+
+__all__ = ["OptimizerConfig", "apply_updates", "global_norm",
+           "init_opt_state", "lr_schedule"]

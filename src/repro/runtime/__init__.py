@@ -1,0 +1,4 @@
+"""Fault-tolerant training/serving runtime."""
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+__all__ = ["Trainer", "TrainerConfig"]

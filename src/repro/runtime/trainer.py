@@ -1,0 +1,166 @@
+"""Fault-tolerant training runtime.
+
+The loop a pod-scale deployment needs, specialized to whatever mesh exists
+at runtime (512-device dry-run mesh or the 1-device CPU smoke mesh):
+
+* checkpoint/restart — async atomic checkpoints every ``ckpt_every`` steps;
+  on start the trainer restores the latest committed step and resumes from
+  the right position in the deterministic data stream (no data state to
+  save);
+* preemption handling — SIGTERM/SIGINT set a flag; the loop finishes the
+  current step, writes a blocking checkpoint, and exits cleanly (what a
+  TPU maintenance event gives you ~30s to do);
+* straggler/hang mitigation — per-step wall-time EWMA; steps slower than
+  ``straggler_factor`` x EWMA are logged with the step index (on real pods
+  this feeds the controller that decides to restart a slow host); a hard
+  ``step_timeout_s`` turns a wedged collective into a crash that the
+  restart path recovers, instead of an indefinite hang;
+* elastic scaling — restore() re-places arrays on the current mesh, so the
+  same checkpoint resumes on a different device count (data layout is
+  logical, see checkpoint/store.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointStore
+from repro.configs.base import ArchConfig
+from repro.data.lm_pipeline import TokenStream
+from repro.models import lm
+from repro.optim import OptimizerConfig, init_opt_state
+from repro.launch.steps import make_train_step
+from repro.sharding import batch_pspecs, named, param_pspecs
+from repro.sharding.activation import activation_mesh
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    seed: int = 0
+    batch: int = 8
+    seq_len: int = 256
+    microbatches: int = 1
+    straggler_factor: float = 3.0
+    step_timeout_s: float = 600.0
+    keep_ckpts: int = 3
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig, mesh,
+                 opt_cfg: OptimizerConfig | None = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.opt_cfg = opt_cfg or OptimizerConfig(
+            total_steps=tcfg.steps, warmup_steps=max(1, tcfg.steps // 20))
+        self.store = CheckpointStore(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
+        self.stream = TokenStream(cfg, tcfg.batch, tcfg.seq_len,
+                                  seed=tcfg.seed)
+        self._preempted = False
+        self._ewma = None
+        self.stats_log: list = []
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def _install_signal_handlers(self):
+        def handler(signum, frame):  # noqa: ARG001
+            self._preempted = True
+
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(sig, handler)
+            except ValueError:  # non-main thread (tests)
+                pass
+
+    def init_state(self):
+        params = lm.init_lm(jax.random.PRNGKey(self.tcfg.seed), self.cfg)
+        opt_state = init_opt_state(params, self.opt_cfg)
+        pspecs = named(param_pspecs(params, self.mesh), self.mesh)
+        ospecs = named(param_pspecs(opt_state, self.mesh), self.mesh)
+        params = jax.tree.map(jax.device_put, params,
+                              pspecs)
+        opt_state = jax.tree.map(jax.device_put, opt_state, ospecs)
+        return params, opt_state, (pspecs, ospecs)
+
+    def restore_or_init(self):
+        params, opt_state, (pspecs, ospecs) = self.init_state()
+        start = 0
+        latest = self.store.latest_step()
+        if latest is not None:
+            (params, opt_state), _ = self.store.restore(
+                (params, opt_state), latest,
+                shardings=(pspecs, ospecs))
+            start = latest
+            print(f"[trainer] restored step {latest} from "
+                  f"{self.tcfg.ckpt_dir}")
+        return params, opt_state, start
+
+    # -- the loop --------------------------------------------------------------
+
+    def run(self) -> dict:
+        self._install_signal_handlers()
+        t = self.tcfg
+        params, opt_state, start = self.restore_or_init()
+        step_fn = make_train_step(self.cfg, self.opt_cfg, t.microbatches)
+        with self.mesh, activation_mesh(self.mesh):
+            jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+            losses = []
+            for step in range(start, t.steps):
+                batch = {k: jax.device_put(v)
+                         for k, v in self.stream.batch_at(step).items()}
+                t0 = time.time()
+                params, opt_state, stats = jit_step(params, opt_state,
+                                                    batch)
+                loss = float(stats["loss"])  # sync point (device barrier)
+                dt = time.time() - t0
+                if not np.isfinite(loss):
+                    raise FloatingPointError(
+                        f"non-finite loss at step {step}: {loss}")
+                losses.append(loss)
+
+                # straggler detection (per-step EWMA)
+                if self._ewma is None:
+                    self._ewma = dt
+                slow = dt > self.tcfg.straggler_factor * self._ewma
+                if slow and step > start + 3:
+                    print(f"[trainer] STRAGGLER step {step}: {dt:.2f}s vs "
+                          f"EWMA {self._ewma:.2f}s")
+                if dt > self.tcfg.step_timeout_s:
+                    raise TimeoutError(
+                        f"step {step} exceeded {t.step_timeout_s}s")
+                self._ewma = 0.9 * self._ewma + 0.1 * dt
+
+                if step % t.log_every == 0 or step == t.steps - 1:
+                    rec = {"step": step, "loss": loss,
+                           "lr": float(stats["lr"]),
+                           "grad_norm": float(stats["grad_norm"]),
+                           "sec": round(dt, 3)}
+                    self.stats_log.append(rec)
+                    print(f"[trainer] {rec}")
+
+                if (step + 1) % t.ckpt_every == 0:
+                    self.store.save(step + 1, (params, opt_state))
+
+                if self._preempted:
+                    print(f"[trainer] preemption: checkpointing step "
+                          f"{step + 1} and exiting")
+                    self.store.save(step + 1, (params, opt_state),
+                                    blocking=True)
+                    return {"losses": losses, "preempted": True,
+                            "stop_step": step + 1}
+
+            self.store.save(t.steps, (params, opt_state), blocking=True)
+        return {"losses": losses, "preempted": False,
+                "stop_step": t.steps, "final_params": params}
+
+
+__all__ = ["Trainer", "TrainerConfig"]

@@ -1,0 +1,6 @@
+"""Mesh-axis sharding rules for params, batches and caches."""
+from repro.sharding.rules import (Rules, batch_pspecs, cache_pspecs, dp_axes,
+                                  named, param_pspecs)
+
+__all__ = ["Rules", "param_pspecs", "batch_pspecs", "cache_pspecs", "named",
+           "dp_axes"]

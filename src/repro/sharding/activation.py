@@ -1,0 +1,122 @@
+"""Activation sharding constraints, mesh-aware but model-code friendly.
+
+Model code calls ``constrain(x, (BATCH_AXES, None, "model"))`` without
+knowing which mesh (if any) is active: launch code wraps tracing in
+``activation_mesh(mesh)``, and outside that context (CPU smoke tests,
+single-device examples) constraints are no-ops. Entries may be a single
+axis name or a tuple of axes sharded jointly; axes missing from the mesh or
+not dividing the dimension are dropped silently.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")  # sentinel resolved against the active strategy
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_activation_mesh", default=None)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh, strategy: str = "tp_sp"):
+    """Enable activation constraints for code traced inside this context.
+
+    strategy:
+      "tp_sp" — batch over (pod, data); tensor/sequence parallelism over
+                "model" (Megatron-SP, the default);
+      "fsdp"  — batch over (pod, data, model): pure ZeRO-3 data
+                parallelism; every "model" entry in activation specs
+                resolves to None (weights are gathered per layer instead —
+                EXPERIMENTS.md §Perf granite iteration 4).
+    """
+    if strategy == "fsdp":
+        batch_axes = ("pod", "data", "model")
+        tensor_ok = False
+    else:
+        batch_axes = ("pod", "data")
+        tensor_ok = True
+    token = _ACTIVE.set({
+        "sizes": {a: int(mesh.shape[a]) for a in mesh.axis_names},
+        "batch_axes": batch_axes,
+        "tensor_ok": tensor_ok,
+    })
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def grad_compressed_boundary(x, spec: tuple):
+    """Identity with a compressed, layout-pinned backward edge.
+
+    At sequence-parallel block boundaries the cotangent is (a) f32 —
+    upcast by the norm internals — and (b) materialized by XLA as a
+    replicated all-reduce. This custom_vjp casts the boundary cotangent to
+    bf16 (gradient compression on the ICI wire, 2x) and constrains it to
+    the boundary's own sharding, steering the partitioner to a
+    reduce-scatter instead of an all-reduce (up to another 2x x TP-degree
+    in moved bytes). Forward is exact; backward loses only the bf16
+    rounding of an activation gradient — the same precision grads already
+    have everywhere else in the network.
+    """
+    if _ACTIVE.get() is None:
+        return x
+    return _gc_boundary(x, tuple(spec))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _gc_boundary(x, spec):
+    return x
+
+
+def _gc_fwd(x, spec):
+    return x, None
+
+
+def _gc_bwd(spec, _res, g):
+    g = g.astype(jnp.bfloat16).astype(g.dtype)
+    return (constrain(g, spec),)
+
+
+_gc_boundary.defvjp(_gc_fwd, _gc_bwd)
+
+
+def constrain(x, spec: tuple):
+    """with_sharding_constraint honoring only axes present & divisible.
+
+    Spec entries: None, an axis name, or a tuple of axes (sharded
+    jointly). The BATCH_AXES sentinel resolves to the active strategy's
+    batch axes; "model" entries are dropped under the fsdp strategy."""
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return x
+    axis_sizes = ctx["sizes"]
+    entries = []
+    for dim, want in zip(x.shape, spec):
+        if want is None:
+            entries.append(None)
+            continue
+        cands = want if isinstance(want, tuple) else (want,)
+        if cands == BATCH_AXES:
+            cands = ctx["batch_axes"]
+        elif not ctx["tensor_ok"] and "model" in cands:
+            cands = tuple(a for a in cands if a != "model")
+        axes = tuple(a for a in cands if a in axis_sizes)
+        size = math.prod(axis_sizes[a] for a in axes) if axes else 1
+        if axes and size > 1 and dim % size == 0:
+            entries.append(axes if len(axes) > 1 else axes[0])
+        else:
+            entries.append(None)
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*entries))
+
+
+__all__ = ["constrain", "activation_mesh", "BATCH_AXES"]

@@ -1,0 +1,290 @@
+"""Sharding rules: param/batch/cache pytrees -> PartitionSpecs on the mesh.
+
+Axis roles on the production mesh (DESIGN.md §distribution):
+
+    pod    pure data parallelism across pods (grad all-reduce crosses the
+           inter-pod links once per step; params/state replicated per pod)
+    data   batch parallelism + FSDP: weight matrices also shard their
+           d_model-ish dimension here, so optimizer state divides by the
+           full 256-way device count (ZeRO-3-flavoured storage; XLA
+           re-gathers per layer)
+    model  tensor parallelism: attention heads (or head_dim for MQA),
+           MLP hidden, MoE experts (EP) or expert-hidden (TP), vocab
+
+Rules are name+shape driven over the flattened param paths, with
+divisibility guards: a dimension only shards if the mesh axis divides it
+(e.g. gemma3's 4 heads can't split 16-way -> its 256-dim head_dim shards
+instead; internvl's 92553 vocab stays replicated).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axsize(mesh, name) -> int:
+    return mesh.shape[name]
+
+
+def _div(dim: int, size: int) -> bool:
+    return dim % size == 0 and dim >= size
+
+
+class Rules:
+    def __init__(self, mesh, strategy: str = "tp_sp"):
+        self.mesh = mesh
+        self.strategy = strategy
+        self.model = _axsize(mesh, "model")
+        self.data = _axsize(mesh, "data")
+
+    # -- helpers -----------------------------------------------------------
+
+    def m(self, dim: int):
+        """'model' if divisible else None."""
+        return "model" if _div(dim, self.model) else None
+
+    def d(self, dim: int):
+        return "data" if _div(dim, self.data) else None
+
+    def dp(self, dim: int):
+        """Full data-parallel axes tuple if divisible, else best effort."""
+        axes = dp_axes(self.mesh)
+        if self.strategy == "fsdp":
+            axes = axes + ("model",)
+            total = int(np.prod([_axsize(self.mesh, a) for a in axes]))
+            if _div(dim, total):
+                return axes
+            axes = dp_axes(self.mesh)
+        total = int(np.prod([_axsize(self.mesh, a) for a in axes]))
+        if _div(dim, total):
+            return axes
+        if _div(dim, self.data):
+            return ("data",)
+        return None
+
+    # -- parameter rules ----------------------------------------------------
+
+    def param_spec(self, path: str, shape: tuple) -> P:
+        """PartitionSpec for one parameter. ``path`` is '/'-joined keys with
+        stacked layer-run axes already stripped by the caller."""
+        name = path.split("/")[-1]
+        nd = len(shape)
+
+        if name == "embed":
+            return P(self.m(shape[0]), self.d(shape[1]))
+        if name == "lm_head":
+            return P(self.d(shape[0]), self.m(shape[1]))
+        if name == "pos_embed_dec":
+            return P(None, self.d(shape[1]))
+
+        # attention projections
+        if name == "wq" and nd == 3:
+            d, h, hd = shape
+            if self.m(h):
+                return P(self.d(d), "model", None)
+            return P(self.d(d), None, self.m(hd))
+        if name in ("wk", "wv") and nd == 3:
+            d, kv, hd = shape
+            if self.m(kv):
+                return P(self.d(d), "model", None)
+            return P(self.d(d), None, self.m(hd))
+        if name == "wo" and nd == 3:
+            h, hd, d = shape
+            if self.m(h):
+                return P("model", None, self.d(d))
+            return P(None, self.m(hd), self.d(d))
+        if name in ("bq", "bk", "bv") and nd == 2:
+            h, hd = shape
+            if self.m(h):
+                return P("model", None)
+            return P(None, self.m(hd))
+
+        # MLA
+        if name == "wq_a":
+            return P(self.d(shape[0]), None)
+        if name == "wq_b":
+            return P(None, self.m(shape[1]), None)
+        if name == "wkv_a":
+            return P(self.d(shape[0]), None)
+        if name in ("wk_b", "wv_b"):
+            return P(None, self.m(shape[1]), None)
+
+        # MoE (expert tensors are (E, D, F) / (E, F, D))
+        if name == "router":
+            return P(self.d(shape[0]), None)
+        if re.search(r"moe/(w_gate|w_up)$", path) and nd == 3:
+            e, d, f = shape
+            if self.m(e):
+                return P("model", self.d(d), None)
+            return P(None, self.d(d), self.m(f))
+        if re.search(r"moe/w_down$", path) and nd == 3:
+            e, f, d = shape
+            if self.m(e):
+                return P("model", None, self.d(d))
+            return P(None, self.m(f), self.d(d))
+
+        # dense MLP / shared experts
+        if name in ("w_gate", "w_up", "w_ff1") and nd == 2:
+            return P(self.d(shape[0]), self.m(shape[1]))
+        if name in ("w_down", "w_ff2") and nd == 2:
+            return P(self.m(shape[0]), self.d(shape[1]))
+
+        # recurrent families
+        if name in ("w_in", "w_gate_in") and nd == 2:
+            return P(self.d(shape[0]), self.m(shape[1]))
+        if name in ("w_rg", "w_ig") and nd == 2:
+            return P(self.m(shape[0]), None)
+        if name == "w_out" and nd == 2:
+            return P(self.m(shape[0]), self.d(shape[1]))
+        if name in ("wq", "wk", "wv") and nd == 2:  # mlstm projections
+            return P(self.d(shape[0]), self.m(shape[1]))
+        if name == "w_if":
+            return P(self.d(shape[0]), None)
+        if name == "w_zifo":
+            return P(self.d(shape[0]), self.m(shape[1]))
+        if name == "r_zifo":
+            return P(None, None, self.m(shape[2]))
+        if name == "lam" or name == "skip":
+            return P(self.m(shape[0]))
+        if path.endswith("conv/w"):
+            return P(None, self.m(shape[1]))
+        if path.endswith("conv/b"):
+            return P(self.m(shape[0]))
+
+        # norms, biases, everything small: replicate
+        return P(*([None] * nd))
+
+    # -- batch / cache rules -------------------------------------------------
+
+    def batch_spec(self, name: str, shape: tuple) -> P:
+        nd = len(shape)
+        b = self.dp(shape[0])
+        if name in ("tokens", "labels", "mask"):
+            if b is None and nd == 2 and shape[1] > 1:
+                # long-context single-sequence: shard sequence instead
+                return P(None, self.dp(shape[1]))
+            return P(b, *([None] * (nd - 1)))
+        if name in ("patch_embeds", "frames"):
+            return P(b, None, None)
+        return P(*([None] * nd))
+
+    def cache_spec(self, path: str, shape: tuple) -> P:
+        """Cache entries carry a leading stacked-layer axis L.
+
+        KV caches (L, B, S, Kv, hd): batch over dp when divisible, else
+        sequence over dp (context parallelism for the 500k cell); heads
+        over model.
+        """
+        name = path.split("/")[-1]
+        nd = len(shape)
+        if name in ("k", "v") and nd == 5:
+            L, B, S, kv, hd = shape
+            b = self.dp(B)
+            s = None if b else self.dp(S)
+            return P(None, b, s, self.m(kv) if self.m(kv) else None,
+                     None if self.m(kv) else self.m(hd))
+        if name in ("k", "v") and nd == 4:  # unstacked
+            B, S, kv, hd = shape
+            b = self.dp(B)
+            s = None if b else self.dp(S)
+            return P(b, s, self.m(kv) if self.m(kv) else None,
+                     None if self.m(kv) else self.m(hd))
+        if name == "c_kv" and nd == 4:
+            L, B, S, r = shape
+            b = self.dp(B)
+            s = None if b else self.dp(S)
+            return P(None, b, s, None)
+        if name == "k_rope" and nd == 4:
+            L, B, S, r = shape
+            b = self.dp(B)
+            s = None if b else self.dp(S)
+            return P(None, b, s, None)
+        if name == "C" and nd == 5:  # mlstm matrix memory (L,B,H,dh,dh)
+            return P(None, self.dp(shape[1]), self.m(shape[2]), None, None)
+        if nd >= 2:
+            b = self.dp(shape[1]) if nd >= 2 else None
+            return P(None, b, *([None] * (nd - 2)))
+        return P(*([None] * nd))
+
+
+# ---------------------------------------------------------------------------
+# tree-level API
+# ---------------------------------------------------------------------------
+
+
+_STACKED_PREFIXES = ("layers", "encoder", "cross", "mu", "nu")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_pspecs(params, mesh, *, _strip=("mu/", "nu/")) -> object:
+    """PartitionSpec tree matching ``params`` (works for optimizer moment
+    trees too — moments shard like their parameters)."""
+    rules = Rules(mesh)
+
+    def one(path, leaf):
+        p = _path_str(path)
+        # optimizer state prefixes shard identically to the parameter
+        for pre in ("mu/", "nu/"):
+            if p.startswith(pre):
+                p = p[len(pre):]
+        p = re.sub(r"/(row|col|full)$", "", p)
+        shape = tuple(leaf.shape)
+        if p == "step" or not shape:
+            return P()
+        if re.fullmatch(r"(layers|encoder)/\d+/.*", p) or \
+                p.startswith("cross/"):
+            inner = tuple(rules.param_spec(p, shape[1:]))
+            # factored moments may have dropped trailing dims vs the param
+            return P(None, *inner[:len(shape) - 1])
+        spec = tuple(rules.param_spec(p, shape))
+        return P(*spec[:len(shape)])
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_pspecs(batch, mesh, strategy: str = "tp_sp"):
+    rules = Rules(mesh, strategy)
+
+    def one(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        spec = rules.batch_spec(name, tuple(leaf.shape))
+        return P(*spec[:len(leaf.shape)])
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def cache_pspecs(cache, mesh, strategy: str = "tp_sp"):
+    rules = Rules(mesh, strategy)
+
+    def one(path, leaf):
+        spec = rules.cache_spec(_path_str(path), tuple(leaf.shape))
+        return P(*spec[:len(leaf.shape)])
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+__all__ = ["Rules", "param_pspecs", "batch_pspecs", "cache_pspecs", "named",
+           "dp_axes"]

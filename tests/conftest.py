@@ -1,0 +1,19 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the single real CPU device; only launch/dryrun.py (its own process)
+requests 512 placeholder devices."""
+import numpy as np
+import pytest
+
+from repro.data.synthetic import make_classification, make_regression
+
+
+@pytest.fixture(scope="session")
+def cls_data():
+    X, y = make_classification(n_samples=90, n_features=8, seed=3)
+    return X.astype(np.float32), y
+
+
+@pytest.fixture(scope="session")
+def reg_data():
+    X, y = make_regression(n_samples=90, n_features=6, seed=4)
+    return X.astype(np.float32), y.astype(np.float32)

@@ -1,0 +1,104 @@
+"""Exactness: the paper's optimized measures == naive full CP, bit-for-bit
+on the p-value counts (the paper's central 'exact optimization' claim).
+Property-based via hypothesis over data geometry, k, labels.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.measures import kde as kde_m
+from repro.core.measures import knn as knn_m
+from repro.core.measures import lssvm as lssvm_m
+from repro.data.synthetic import make_classification
+
+
+def _data(n, p, n_labels, seed):
+    X, y = make_classification(n_samples=n, n_features=p,
+                               n_classes=n_labels, seed=seed)
+    return jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.int32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 9),
+       n_labels=st.integers(2, 4),
+       simplified=st.booleans())
+def test_knn_optimized_equals_standard(seed, k, n_labels, simplified):
+    X, y = _data(40, 5, n_labels, seed)
+    Xt, _ = _data(6, 5, n_labels, seed + 1)
+    p_std = knn_m.pvalues_standard(X, y, Xt, k=k, simplified=simplified,
+                                   n_labels=n_labels)
+    st_ = knn_m.fit(X, y, k=k)
+    p_opt = knn_m.pvalues_optimized(st_, Xt, k=k, simplified=simplified,
+                                    n_labels=n_labels)
+    np.testing.assert_allclose(np.asarray(p_std), np.asarray(p_opt),
+                               atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), h=st.floats(0.5, 3.0),
+       n_labels=st.integers(2, 3))
+def test_kde_optimized_equals_standard(seed, h, n_labels):
+    X, y = _data(35, 4, n_labels, seed)
+    Xt, _ = _data(5, 4, n_labels, seed + 1)
+    p_std = kde_m.pvalues_standard(X, y, Xt, h=h, p_dim=4,
+                                   n_labels=n_labels)
+    st_ = kde_m.fit(X, y, h=h, n_labels=n_labels)
+    p_opt = kde_m.pvalues_optimized(st_, Xt, h=h, p_dim=4,
+                                    n_labels=n_labels)
+    np.testing.assert_allclose(np.asarray(p_std), np.asarray(p_opt),
+                               atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), rho=st.floats(0.5, 4.0))
+def test_lssvm_optimized_equals_standard(seed, rho):
+    X, y = _data(25, 4, 2, seed)
+    Xt, _ = _data(4, 4, 2, seed + 1)
+    Y = 2.0 * jnp.asarray(y, jnp.float32) - 1.0
+    p_std = lssvm_m.pvalues_standard(X, Y, Xt, rho=rho)
+    st_ = lssvm_m.fit(X, Y, rho)
+    p_opt = lssvm_m.pvalues_optimized(st_, Xt)
+    np.testing.assert_allclose(np.asarray(p_std), np.asarray(p_opt),
+                               atol=1e-4)
+
+
+def test_lssvm_incremental_matches_refit():
+    """Lee et al. (2019) update == training from scratch."""
+    X, y = _data(30, 5, 2, 0)
+    Y = 2.0 * jnp.asarray(y, jnp.float32) - 1.0
+    st_ = lssvm_m.fit(X[:-1], Y[:-1], 1.0)
+    st_inc = lssvm_m.incremental_add(st_, X[-1], Y[-1])
+    st_full = lssvm_m.fit(X, Y, 1.0)
+    np.testing.assert_allclose(np.asarray(st_inc.w), np.asarray(st_full.w),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st_inc.C), np.asarray(st_full.C),
+                               atol=2e-5)
+
+
+def test_lssvm_loo_scores_match_per_point_downdate():
+    """Vectorized LOO (3 GEMMs) == n separate decremental removals."""
+    X, y = _data(20, 4, 2, 1)
+    Y = 2.0 * jnp.asarray(y, jnp.float32) - 1.0
+    st_ = lssvm_m.fit(X, Y, 1.0)
+    fast = np.asarray(lssvm_m.loo_scores(st_))
+    for i in range(X.shape[0]):
+        mask = jnp.arange(X.shape[0]) != i
+        st_i = lssvm_m.fit(X[mask], Y[mask], 1.0)
+        slow = -Y[i] * (X[i] @ st_i.w)
+        assert abs(fast[i] - float(slow)) < 5e-4, i
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 6))
+def test_knn_incremental_add_matches_refit(seed, k):
+    """Online learning (paper Section 9): learn-one == refit."""
+    X, y = _data(30, 4, 2, seed)
+    st_inc = knn_m.fit(X[:-1], y[:-1], k=k)
+    st_inc = knn_m.incremental_add(st_inc, X[-1], y[-1], k=k)
+    st_full = knn_m.fit(X, y, k=k)
+    np.testing.assert_allclose(np.asarray(st_inc.best_same),
+                               np.asarray(st_full.best_same), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_inc.best_diff),
+                               np.asarray(st_full.best_diff), atol=1e-5)

@@ -1,0 +1,108 @@
+"""Per-kernel allclose sweeps: Pallas kernel (interpret=True on CPU) vs the
+pure-jnp oracle in kernels/ref.py, across shapes and dtypes.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.cp_update import cp_knn_counts as cp_pallas
+from repro.kernels.kde_score import kde_rowsums as kde_pallas
+from repro.kernels.pairwise_dist import pairwise_sq_dists
+from repro.kernels.flash_attention import flash_attention as fa_pallas
+
+
+@pytest.mark.parametrize("m,n,p", [(8, 8, 4), (65, 33, 7), (128, 256, 30),
+                                   (257, 130, 129)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_dist_sweep(m, n, p, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m * n))
+    A = jax.random.normal(k1, (m, p), dtype)
+    B = jax.random.normal(k2, (n, p), dtype)
+    got = pairwise_sq_dists(A, B, block_m=64, block_n=64, interpret=True)
+    want = ref.sq_dists(A.astype(jnp.float32), B.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("m,n", [(16, 16), (65, 128), (130, 70)])
+@pytest.mark.parametrize("exclude_diag", [False, True])
+def test_kde_rowsums_sweep(m, n, exclude_diag):
+    if exclude_diag and m != n:
+        pytest.skip("diag only for square")
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(m + n), 3)
+    A = jax.random.normal(k1, (m, 6), jnp.float32)
+    B = A if exclude_diag else jax.random.normal(k2, (n, 6), jnp.float32)
+    yA = jax.random.randint(k3, (m,), 0, 3, jnp.int32)
+    yB = yA if exclude_diag else jax.random.randint(
+        jax.random.PRNGKey(9), (n,), 0, 3, jnp.int32)
+    got = kde_pallas(A, B, yA, yB, h=1.3, exclude_diag=exclude_diag,
+                     interpret=True)
+    want = ref.kde_rowsums(A, B, yA, yB, 1.3, exclude_diag)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("n,m,l", [(64, 4, 2), (130, 7, 3)])
+def test_cp_knn_counts_sweep(n, m, l):
+    ks = jax.random.split(jax.random.PRNGKey(n), 6)
+    X = jax.random.normal(ks[0], (n, 5), jnp.float32)
+    y = jax.random.randint(ks[1], (n,), 0, l, jnp.int32)
+    Xt = jax.random.normal(ks[2], (m, 5), jnp.float32)
+    sum_same = jax.random.uniform(ks[3], (n,), jnp.float32, 1.0, 4.0)
+    kth = jax.random.uniform(ks[4], (n,), jnp.float32, 0.5, 2.0)
+    alpha = jax.random.uniform(ks[5], (m, l), jnp.float32, 1.0, 3.0)
+    got = cp_pallas(X, y, sum_same, kth, Xt, alpha, n_labels=l,
+                    interpret=True)
+    want = ref.cp_knn_counts(X, y, sum_same, kth, Xt, alpha)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("cfg", [
+    dict(B=1, Sq=64, Skv=64, H=4, Hkv=4, D=16, causal=True, window=None),
+    dict(B=2, Sq=63, Skv=63, H=4, Hkv=1, D=32, causal=True, window=None),
+    dict(B=1, Sq=128, Skv=128, H=2, Hkv=2, D=16, causal=True, window=17),
+    dict(B=1, Sq=64, Skv=64, H=4, Hkv=2, D=16, causal=False, window=None),
+    dict(B=1, Sq=16, Skv=80, H=2, Hkv=1, D=16, causal=True, window=None),
+])
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_flash_attention_sweep(cfg, softcap):
+    ks = jax.random.split(jax.random.PRNGKey(cfg["Sq"]), 3)
+    q = jax.random.normal(ks[0], (cfg["B"], cfg["Sq"], cfg["H"], cfg["D"]),
+                          jnp.float32)
+    k = jax.random.normal(ks[1], (cfg["B"], cfg["Skv"], cfg["Hkv"],
+                                  cfg["D"]), jnp.float32)
+    v = jax.random.normal(ks[2], k.shape, jnp.float32)
+    got = fa_pallas(q, k, v, causal=cfg["causal"], window=cfg["window"],
+                    softcap=softcap, block_q=32, block_k=32, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=cfg["causal"],
+                               window=cfg["window"], softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("Sq,Skv,window", [(96, 96, None), (100, 100, 13),
+                                           (64, 160, None)])
+def test_chunked_attention_matches_dense(Sq, Skv, window):
+    ks = jax.random.split(jax.random.PRNGKey(Sq + Skv), 3)
+    q = jax.random.normal(ks[0], (2, Sq, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (2, Skv, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], k.shape, jnp.float32)
+    got = ref.chunked_attention(q, k, v, causal=True, window=window,
+                                block_q=32, block_k=32)
+    want = ref.flash_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_ops_dispatch_interpret(monkeypatch):
+    """REPRO_PALLAS_INTERPRET=1 exercises kernel bodies via ops.py."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    from repro.kernels import ops
+    A = jax.random.normal(jax.random.PRNGKey(0), (33, 7), jnp.float32)
+    got = ops.sq_dists(A, A)
+    want = ref.sq_dists(A, A)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)

@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests (reduced configs): forward/train/decode on
+CPU; output shapes; finite values; decode-vs-full parity for cache paths.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.configs as cfgs
+from repro.models import lm
+
+ARCHS = list(cfgs.names())
+
+
+def _batch(cfg, B=2, S=16, key=jax.random.PRNGKey(1)):
+    ks = jax.random.split(key, 3)
+    if cfg.is_encoder_decoder:
+        return {
+            "frames": jax.random.normal(
+                ks[0], (B, cfg.n_frontend_tokens, cfg.d_model),
+                jnp.float32) * 0.1,
+            "tokens": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size,
+                                         jnp.int32),
+            "labels": jax.random.randint(ks[2], (B, S), 0, cfg.vocab_size,
+                                         jnp.int32),
+        }
+    if cfg.frontend == "vision_stub":
+        s_txt = S - cfg.n_frontend_tokens
+        return {
+            "tokens": jax.random.randint(ks[1], (B, s_txt), 0,
+                                         cfg.vocab_size, jnp.int32),
+            "patch_embeds": jax.random.normal(
+                ks[0], (B, cfg.n_frontend_tokens, cfg.d_model),
+                jnp.float32) * 0.1,
+            "labels": jax.random.randint(ks[2], (B, s_txt), 0,
+                                         cfg.vocab_size, jnp.int32),
+        }
+    return {
+        "tokens": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size,
+                                     jnp.int32),
+        "labels": jax.random.randint(ks[2], (B, S), 0, cfg.vocab_size,
+                                     jnp.int32),
+    }
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_grad(arch):
+    cfg = cfgs.get(arch).reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: lm.train_step_loss(p, cfg, batch))(params)
+    assert np.isfinite(float(loss)), arch
+    gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_shapes(arch):
+    cfg = cfgs.get(arch).reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    B = 2
+    batch = _batch(cfg, B=B)
+    cache = lm.init_cache(cfg, B, 24)
+    if cfg.is_encoder_decoder:
+        cache["cross"] = lm.prefill_cross_cache(params, cfg,
+                                                batch["frames"])
+    tok = jnp.ones((B, 1), jnp.int32)
+    logits, cache2 = lm.decode_step(params, cfg, tok, cache, 0)
+    assert logits.shape == (B, 1, cfg.padded_vocab_size), arch
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), arch
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["qwen2_1_5b", "gemma3_1b",
+                                  "recurrentgemma_9b", "xlstm_125m",
+                                  "mixtral_8x22b", "deepseek_v2_236b"])
+def test_decode_matches_full_forward(arch):
+    """Teacher-forced decode through the cache == full-sequence forward.
+
+    The strongest cache-correctness check: covers KV caches, MLA latent
+    caches, RG-LRU/conv states, m/sLSTM states.
+    """
+    cfg = cfgs.get(arch).reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 12
+    batch = _batch(cfg, B=B, S=S)
+    full_logits, _, _ = lm.forward(params, cfg, batch)
+
+    cache = lm.init_cache(cfg, B, S)
+    toks = batch["tokens"]
+    if cfg.frontend == "vision_stub":
+        pytest.skip("decode parity for vlm covered via text-only archs")
+    outs = []
+    for i in range(toks.shape[1]):
+        lg, cache = lm.decode_step(params, cfg, toks[:, i:i + 1], cache, i)
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits, np.float32),
+        np.asarray(full_logits, np.float32), atol=2e-2, rtol=2e-2)
+
+
+def test_moe_aux_loss_and_dispatch():
+    cfg = cfgs.get("mixtral_8x22b").reduced()
+    from repro.models import mlp as mlp_m
+    p = mlp_m.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
+                          jnp.float32)
+    out, aux = mlp_m.moe(p, x, cfg)
+    assert out.shape == x.shape
+    assert float(aux) >= 0.0
+    # capacity semantics: doubling capacity never changes routed tokens'
+    # outputs for the kept slots (equal weights); just check determinism
+    out2, _ = mlp_m.moe(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2))
+
+
+def test_n_params_analytic_close_to_actual():
+    for arch in ("qwen2_1_5b", "granite_34b"):
+        cfg = cfgs.get(arch).reduced()
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        actual = sum(int(np.prod(p.shape))
+                     for p in jax.tree.leaves(params))
+        est = cfg.n_params()
+        assert 0.5 < est / actual < 2.0, (arch, est, actual)

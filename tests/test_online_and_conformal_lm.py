@@ -1,0 +1,74 @@
+"""Online CP (exchangeability martingale) + conformal LM heads."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.configs as cfgs
+from repro.core import online
+from repro.core.lm_conformal import ConformalOodDetector, \
+    sequence_embedding
+from repro.core.measures import knn as knn_m
+from repro.data.synthetic import make_classification
+from repro.models import lm
+
+
+def test_online_matches_batch_refit():
+    """observe() incremental state == knn fit() from scratch."""
+    X, y = make_classification(n_samples=40, n_features=5, seed=1)
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.int32)
+    k = 4
+    st = online.init(40, 5, k, dtype=jnp.float32)
+    for i in range(30):
+        st, _ = online.observe(st, X[i], y[i], jnp.float32(0.5), k=k)
+    ref = knn_m.fit(X[:30], y[:30], k=k)
+    np.testing.assert_allclose(np.asarray(st.best[:30]),
+                               np.asarray(ref.best_same), atol=1e-5)
+
+
+def test_martingale_flat_under_exchangeability():
+    X, y = make_classification(n_samples=300, n_features=5, seed=2)
+    pv, logm = online.run_stream(jnp.asarray(X, jnp.float32),
+                                 jnp.asarray(y, jnp.int32), k=5,
+                                 key=jax.random.PRNGKey(0))
+    # mixture martingale: E[M] = 1; log M should stay small
+    assert float(logm[-1]) < 3.0, float(logm[-1])
+    assert abs(float(jnp.mean(pv[50:])) - 0.5) < 0.12
+
+
+def test_martingale_grows_on_changepoint():
+    Xa, ya = make_classification(n_samples=150, n_features=5, seed=3)
+    Xb, yb = make_classification(n_samples=150, n_features=5, seed=4,
+                                 class_sep=1.0)
+    Xb = Xb + 8.0  # distribution shift halfway
+    X = np.concatenate([Xa, Xb])
+    y = np.concatenate([ya, yb])
+    pv, logm = online.run_stream(jnp.asarray(X, jnp.float32),
+                                 jnp.asarray(y, jnp.int32), k=5,
+                                 key=jax.random.PRNGKey(1))
+    assert float(logm[-1]) > 5.0, float(logm[-1])  # strong evidence
+
+
+def test_ood_detector_validity_and_power():
+    rng = np.random.default_rng(0)
+    calib = rng.standard_normal((200, 16)).astype(np.float32)
+    test_in = rng.standard_normal((100, 16)).astype(np.float32)
+    test_out = rng.standard_normal((100, 16)).astype(np.float32) + 4.0
+    det = ConformalOodDetector(k=5).fit(calib)
+    p_in = np.asarray(det.pvalues(test_in))
+    p_out = np.asarray(det.pvalues(test_out))
+    # validity: Pr[p <= eps] <= eps (+noise) for in-distribution
+    for eps in (0.05, 0.2):
+        assert np.mean(p_in <= eps) <= eps + 0.08
+    # power: OOD points get tiny p-values
+    assert np.mean(p_out <= 0.05) > 0.95
+
+
+def test_sequence_embedding_shapes():
+    cfg = cfgs.get("qwen2_1_5b").reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.ones((3, 12), jnp.int32)}
+    emb = sequence_embedding(params, cfg, batch, lm)
+    assert emb.shape == (3, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(emb.astype(jnp.float32))))

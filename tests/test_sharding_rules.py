@@ -1,0 +1,123 @@
+"""Sharding-rule unit tests (no devices needed: rules read only mesh shape
+and axis names) + the sharded-CP subprocess test.
+"""
+import subprocess
+import sys
+import textwrap
+from types import SimpleNamespace
+
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import Rules, param_pspecs
+
+
+class FakeMesh(SimpleNamespace):
+    pass
+
+
+def mesh_like(pod=None, data=16, model=16):
+    names = (("pod",) if pod else ()) + ("data", "model")
+    shape = {}
+    if pod:
+        shape["pod"] = pod
+    shape["data"] = data
+    shape["model"] = model
+    return FakeMesh(axis_names=names, shape=shape)
+
+
+def test_attention_head_sharding_prefers_heads():
+    r = Rules(mesh_like())
+    assert r.param_spec("layers/0/attn/wq", (6144, 48, 128)) == \
+        P("data", "model", None)
+    # MQA: 1 kv head cannot shard -> head_dim shards instead
+    assert r.param_spec("layers/0/attn/wk", (1152, 1, 256)) == \
+        P("data", None, "model")
+    # tiny head count AND tiny head_dim: replicate head dims
+    assert r.param_spec("layers/0/attn/wq", (64, 4, 8)) == \
+        P("data", None, None)
+
+
+def test_mlp_and_vocab_rules():
+    r = Rules(mesh_like())
+    assert r.param_spec("layers/0/mlp/w_up", (6144, 24576)) == \
+        P("data", "model")
+    assert r.param_spec("layers/0/mlp/w_down", (24576, 6144)) == \
+        P("model", "data")
+    assert r.param_spec("embed", (262144, 1152)) == P("model", "data")
+    # non-divisible vocab stays unsharded on that dim
+    assert r.param_spec("embed", (92553, 6144)) == P(None, "data")
+
+
+def test_moe_expert_rules():
+    r = Rules(mesh_like())
+    # 160 experts shard over model (EP)
+    assert r.param_spec("layers/0/moe/w_up", (160, 5120, 1536)) == \
+        P("model", "data", None)
+    # 8 experts can't: expert-hidden shards instead (TP)
+    assert r.param_spec("layers/0/moe/w_up", (8, 6144, 16384)) == \
+        P(None, "data", "model")
+
+
+def test_param_pspecs_stacked_layers_and_opt_state():
+    params = {"layers": [{"mlp": {"w_up": jnp.zeros((4, 64, 128))}}],
+              "embed": jnp.zeros((256, 64))}
+    opt = {"mu": params, "nu": {"layers": [{"mlp": {"w_up": {
+        "row": jnp.zeros((4, 64))}}}], "embed": {"full": jnp.zeros(
+            (256, 64))}}, "step": jnp.zeros((), jnp.int32)}
+    mesh = mesh_like(data=4, model=8)
+    ps = param_pspecs(params, mesh)
+    assert ps["layers"][0]["mlp"]["w_up"] == P(None, "data", "model")
+    os_ = param_pspecs(opt, mesh)
+    assert os_["mu"]["layers"][0]["mlp"]["w_up"] == P(None, "data", "model")
+    # factored row moment: conservatively replicated (tiny) except the
+    # stacked-layer dim
+    assert os_["nu"]["layers"][0]["mlp"]["w_up"]["row"] == P(None, None)
+    assert os_["step"] == P()
+
+
+def test_batch_specs_long_context_seq_sharding():
+    r = Rules(mesh_like())
+    # decode tokens (1, 1): nothing shardable
+    assert r.batch_spec("tokens", (1, 1)) == P(None, None)
+    # long-context single sequence: shard S
+    assert r.batch_spec("tokens", (1, 524288)) == P(None, ("data",))
+    assert r.batch_spec("tokens", (256, 4096)) == P(("data",), None)
+
+
+SHARDED_CP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.data.synthetic import make_classification
+    from repro.core.measures import knn as knn_m
+    from repro.core import distributed as dist
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    X, y = make_classification(n_samples=101, n_features=6, seed=0)
+    X = X.astype(np.float32); y = y.astype(np.int32)
+    Xte = X[:6] + 0.05
+    st = knn_m.fit(jnp.asarray(X), jnp.asarray(y), k=5)
+    ref = np.asarray(knn_m.pvalues_optimized(
+        st, jnp.asarray(Xte), k=5, simplified=False, n_labels=2))
+    cfg = dist.CpShardingConfig(row_axes=("data",), query_axis="model")
+    st_sh = dist.shard_knn_state(st, mesh, cfg)
+    fn = dist.make_knn_pvalues_fn(mesh, k=5, simplified=False, n_labels=2,
+                                  cfg=cfg)
+    Xte_sh = jax.device_put(jnp.asarray(Xte),
+                            NamedSharding(mesh, P("model", None)))
+    out = np.asarray(fn(st_sh, Xte_sh))
+    assert np.abs(out - ref).max() < 1e-6, np.abs(out - ref).max()
+    print("SHARDED_OK")
+""")
+
+
+def test_sharded_cp_matches_single_device():
+    """Distributed CP == single-device optimized CP (8 virtual devices;
+    subprocess so the main test process keeps its single real device)."""
+    r = subprocess.run([sys.executable, "-c", SHARDED_CP_SCRIPT],
+                       capture_output=True, text=True, timeout=600)
+    assert "SHARDED_OK" in r.stdout, r.stdout + r.stderr

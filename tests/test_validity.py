@@ -1,0 +1,73 @@
+"""Statistical validity: CP's coverage guarantee Pr[y not in set] <= eps,
+p-value distribution properties, ICP validity, fuzziness comparison
+(full CP should not be worse than ICP — paper Appendix G direction).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import pvalues as pv
+from repro.core.predictor import ConformalClassifier, \
+    InductiveConformalClassifier
+from repro.data.synthetic import make_classification
+
+
+def test_coverage_guarantee_knn():
+    """Empirical coverage >= 1 - eps (up to binomial noise)."""
+    rs = []
+    for seed in range(5):
+        X, y = make_classification(n_samples=150, n_features=6, seed=seed)
+        X = X.astype(np.float32)
+        clf = ConformalClassifier(measure="knn", k=5, n_labels=2).fit(
+            X[:100], y[:100])
+        p = clf.predict_pvalues(X[100:150])
+        cov, size = pv.coverage(p, jnp.asarray(y[100:150]), 0.2)
+        rs.append(float(cov))
+    assert np.mean(rs) >= 0.8 - 0.07, rs
+
+
+def test_pvalue_validity_under_null():
+    """p-values for exchangeable data: Pr[p <= eps] <= eps (+ noise)."""
+    X, y = make_classification(n_samples=220, n_features=5, seed=7)
+    X = X.astype(np.float32)
+    clf = ConformalClassifier(measure="simplified_knn", k=5,
+                              n_labels=2).fit(X[:160], y[:160])
+    p_all = np.asarray(clf.predict_pvalues(X[160:220]))
+    p_true = p_all[np.arange(60), y[160:220]]
+    for eps in (0.1, 0.25, 0.5):
+        assert np.mean(p_true <= eps) <= eps + 0.13, eps
+
+
+def test_smoothed_pvalue_exact_uniform():
+    """Smoothed p-values are exactly U{(i+tau)/(n+1)} -> mean 0.5."""
+    rng = np.random.default_rng(0)
+    alphas = jnp.asarray(rng.standard_normal(2000), jnp.float32)
+    a = jnp.asarray(rng.standard_normal(500), jnp.float32)
+    taus = jnp.asarray(rng.random(500), jnp.float32)
+    ps = jax.vmap(lambda ai, t: pv.smoothed_pvalue(alphas, ai, t))(a, taus)
+    assert abs(float(jnp.mean(ps)) - 0.5) < 0.05
+
+
+def test_fuzziness_full_cp_not_worse_than_icp():
+    """Paper Appendix G: full CP has lower (better) fuzziness than ICP."""
+    outs = {}
+    X, y = make_classification(n_samples=260, n_features=8, seed=2,
+                               class_sep=1.5)
+    X = X.astype(np.float32)
+    for name, cls in (("cp", ConformalClassifier),
+                      ("icp", InductiveConformalClassifier)):
+        clf = cls(measure="knn", k=7, n_labels=2).fit(X[:200], y[:200])
+        p = clf.predict_pvalues(X[200:260])
+        outs[name] = float(jnp.mean(pv.fuzziness(p)))
+    assert outs["cp"] <= outs["icp"] + 0.02, outs
+
+
+def test_prediction_sets_monotone_in_eps():
+    X, y = make_classification(n_samples=120, n_features=6, seed=9)
+    X = X.astype(np.float32)
+    clf = ConformalClassifier(measure="kde", n_labels=2).fit(X[:90], y[:90])
+    p = clf.predict_pvalues(X[90:110])
+    small = np.asarray(pv.prediction_sets(p, 0.3))
+    big = np.asarray(pv.prediction_sets(p, 0.05))
+    assert (big >= small).all()  # lower eps -> larger sets
