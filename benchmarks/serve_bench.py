@@ -1,0 +1,102 @@
+"""Serving-engine throughput: sessions x steps/s for the micro-batched
+online CP step (observe: evict-if-full + incremental learn + smoothed
+p-value, all in one vmapped jitted dispatch) and the fused-kernel
+read-only predict. Writes BENCH_serve.json.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--out BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _bench_observe(eng, state, X, y, taus, steps):
+    # warmup tick (compile) outside the clock
+    state, p = eng.observe(state, X[:, 0], y[:, 0], taus[:, 0])
+    jax.block_until_ready(p)
+    t0 = time.perf_counter()
+    for t in range(1, steps):
+        state, p = eng.observe(state, X[:, t], y[:, t], taus[:, t])
+    jax.block_until_ready(p)
+    return state, time.perf_counter() - t0, steps - 1
+
+
+def _bench_predict(eng, state, Xq, repeats=3):
+    out = eng.predict(state, Xq)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = eng.predict(state, Xq)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats
+
+
+def run(grid=((8, 128), (32, 128), (64, 256)), *, steps=192, dim=16, k=7,
+        queries=16):
+    from repro.serving import ServingEngine
+
+    results = []
+    for n_sessions, capacity in grid:
+        window = capacity // 2
+        eng = ServingEngine(n_sessions=n_sessions, capacity=capacity,
+                            dim=dim, k=k, n_labels=2, window=window)
+        key = jax.random.PRNGKey(0)
+        kx, ky, kt = jax.random.split(key, 3)
+        X = jax.random.normal(kx, (n_sessions, steps, dim), jnp.float32)
+        y = jax.random.bernoulli(ky, 0.5, (n_sessions, steps)).astype(
+            jnp.int32)
+        taus = jax.random.uniform(kt, (n_sessions, steps),
+                                  dtype=jnp.float32)
+        state, dt, ticks = _bench_observe(eng, eng.init_state(), X, y, taus,
+                                          steps)
+        Xq = jax.random.normal(kx, (n_sessions, queries, dim), jnp.float32)
+        t_pred = _bench_predict(eng, state, Xq)
+        row = {
+            "sessions": n_sessions,
+            "capacity": capacity,
+            "window": window,
+            "dim": dim,
+            "k": k,
+            "ticks": ticks,
+            "observe_wall_s": dt,
+            "session_steps_per_s": n_sessions * ticks / dt,
+            "ticks_per_s": ticks / dt,
+            "predict_wall_s_per_call": t_pred,
+            "predict_pvalues_per_s": n_sessions * queries / t_pred,
+        }
+        results.append(row)
+        print(f"[serve_bench] S={n_sessions:4d} cap={capacity:4d} "
+              f"{row['session_steps_per_s']:10.0f} session-steps/s  "
+              f"{row['predict_pvalues_per_s']:10.0f} query-pvals/s")
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--steps", type=int, default=192)
+    ap.add_argument("--dim", type=int, default=16)
+    ap.add_argument("--quick", action="store_true",
+                    help="single small config (CI smoke)")
+    args = ap.parse_args(argv)
+    grid = ((8, 64),) if args.quick else ((8, 128), (32, 128), (64, 256))
+    results = run(grid, steps=args.steps, dim=args.dim)
+    payload = {
+        "bench": "serving_engine",
+        "backend": jax.default_backend(),
+        "device": str(jax.devices()[0]),
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[serve_bench] wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -161,6 +161,13 @@ class CheckpointStore:
         steps = self.committed_steps()
         return steps[-1] if steps else None
 
+    def read_manifest(self, step: int) -> dict:
+        """Manifest of a committed step (tree structure, leaf shapes/dtypes,
+        ``extra`` metadata) — the public view of the on-disk layout."""
+        with open(os.path.join(_step_dir(self.root, step),
+                               "manifest.json")) as f:
+            return json.load(f)
+
     def restore(self, like_tree, step: int | None = None, *,
                 shardings=None, verify: bool = True):
         """Restore into the structure of ``like_tree``; re-place on any
@@ -170,8 +177,7 @@ class CheckpointStore:
             raise FileNotFoundError(f"no committed checkpoints in "
                                     f"{self.root}")
         d = _step_dir(self.root, step)
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
+        manifest = self.read_manifest(step)
         leaves, treedef = _tree_paths(like_tree)
         if len(leaves) != manifest["n_leaves"]:
             raise ValueError(

@@ -139,7 +139,7 @@ def pvalues_optimized(state: KdeState, X_test, *, h, p_dim, n_labels):
 @functools.partial(jax.jit, static_argnames=("h",))
 def incremental_add(state: KdeState, x_new, y_new, *, h) -> KdeState:
     """Online learning: O(P_K n) per new example (paper Section 9)."""
-    kv = _kvals(x_new[None], state.X)[0]
+    kv = _kvals(x_new[None], state.X, h)[0]
     same = state.y == y_new
     prelim = jnp.where(same, state.prelim + kv, state.prelim)
     own = jnp.sum(jnp.where(same, kv, 0.0))
@@ -148,5 +148,24 @@ def incremental_add(state: KdeState, x_new, y_new, *, h) -> KdeState:
         jnp.concatenate([state.X, x_new[None]], axis=0),
         jnp.concatenate([state.y, jnp.array([y_new], dtype=state.y.dtype)]),
         jnp.concatenate([prelim, own[None]]),
+        counts,
+    )
+
+
+def decremental_remove(state: KdeState, i: int, *, h) -> KdeState:
+    """Decremental unlearning (paper Section 4.1): forget point ``i``.
+
+    Each same-label point sheds the removed point's kernel contribution
+    from its provisional sum — O(P_K n). ``i`` must be a concrete int
+    (shape shrinks; host-level, mirroring incremental_add's growth).
+    """
+    kv = _kvals(state.X[i][None], state.X, h)[0]
+    same = state.y == state.y[i]
+    prelim = jnp.where(same, state.prelim - kv, state.prelim)
+    counts = state.class_counts.at[state.y[i].astype(jnp.int32)].add(-1)
+    return KdeState(
+        jnp.delete(state.X, i, axis=0),
+        jnp.delete(state.y, i, axis=0),
+        jnp.delete(prelim, i, axis=0),
         counts,
     )

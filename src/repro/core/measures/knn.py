@@ -22,6 +22,7 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops as kops
 
@@ -208,4 +209,52 @@ def incremental_add(state: KnnState, x_new, y_new, *, k) -> KnnState:
         jnp.concatenate([state.y, jnp.array([y_new], dtype=state.y.dtype)]),
         jnp.concatenate([new_same, own_same], axis=0),
         jnp.concatenate([new_diff, own_diff], axis=0),
+    )
+
+
+def decremental_remove(state: KnnState, i: int, *, k) -> KnnState:
+    """Decremental unlearning (paper Fig. 1 backwards): forget point ``i``.
+
+    Only points whose same- (or, for the ratio measure, different-) label
+    k-neighbourhood contained point i are affected; each backfills its
+    list with the next-best distance over the remaining set. Distances
+    are recomputed for the O(k)-expected affected rows only — O(a n p)
+    work for a affected rows, the paper's decremental cost, not a refit.
+    Exact vs. ``fit`` on the remaining data. ``i`` must be a concrete int
+    (the result shape shrinks by one row — host-level, like
+    incremental_add's growth; the fixed-shape serving form in
+    ``repro.serving`` instead keeps the distance matrix and never
+    recomputes).
+    """
+    n = state.n
+    i = int(i)
+    if not -n <= i < n:
+        raise IndexError(f"index {i} out of range for {n} training points")
+    i %= n  # negative indices: the mask arithmetic below needs 0 <= i < n
+    d_i = _dists_to_train(state.X[i][None], state.X)[0]
+    keep = jnp.arange(n) != i
+    aff_s = ((state.y == state.y[i]) & keep
+             & (d_i <= state.best_same[:, -1]))
+    aff_d = ((state.y != state.y[i]) & keep
+             & (d_i <= state.best_diff[:, -1]))
+    rows = np.flatnonzero(np.asarray(aff_s | aff_d))
+    best_same, best_diff = state.best_same, state.best_diff
+    if rows.size:
+        r = rows.size
+        D = _dists_to_train(state.X[rows], state.X)  # (r, n)
+        yr = state.y[rows]
+        same_pair = (yr[:, None] == state.y[None, :]) & keep[None, :]
+        same_pair = same_pair.at[jnp.arange(r), rows].set(False)  # no self
+        diff_pair = (yr[:, None] != state.y[None, :]) & keep[None, :]
+        rec_s = jax.vmap(lambda d, m: _k_best(d, m, k))(D, same_pair)
+        rec_d = jax.vmap(lambda d, m: _k_best(d, m, k))(D, diff_pair)
+        best_same = best_same.at[rows].set(
+            jnp.where(aff_s[rows][:, None], rec_s, best_same[rows]))
+        best_diff = best_diff.at[rows].set(
+            jnp.where(aff_d[rows][:, None], rec_d, best_diff[rows]))
+    return KnnState(
+        jnp.delete(state.X, i, axis=0),
+        jnp.delete(state.y, i, axis=0),
+        jnp.delete(best_same, i, axis=0),
+        jnp.delete(best_diff, i, axis=0),
     )

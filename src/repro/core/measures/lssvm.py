@@ -153,14 +153,36 @@ def incremental_add(state: LssvmState, phi_new, y_new) -> LssvmState:
     )
 
 
-@jax.jit
-def decremental_remove_w(state: LssvmState, phi_i, y_i) -> jnp.ndarray:
-    """Lee et al. decremental update of w only: O(q^2)."""
+def _downdate(state: LssvmState, phi_i, y_i):
+    """Shared Lee et al. removal terms: (Cphi, denom, downdated w)."""
     C, w, rho = state.C, state.w, state.rho
     Iq = jnp.eye(C.shape[0], dtype=C.dtype)
     Cphi = (C - Iq) @ phi_i
     denom = -phi_i @ phi_i + rho + phi_i @ C @ phi_i
-    return w - Cphi * (phi_i @ w - y_i) / denom
+    return Cphi, denom, w - Cphi * (phi_i @ w - y_i) / denom
+
+
+@jax.jit
+def decremental_remove_w(state: LssvmState, phi_i, y_i) -> jnp.ndarray:
+    """Lee et al. decremental update of w only: O(q^2)."""
+    return _downdate(state, phi_i, y_i)[2]
+
+
+def decremental_remove(state: LssvmState, i: int) -> LssvmState:
+    """Full Lee et al. decremental update: forget training point ``i``.
+
+    Sherman–Morrison downdate of both w and C in O(q^2) (with
+    A = Phi^T Phi + rho I and C = I - rho A^{-1}, removing phi_i gives
+    C' = C - Cphi Cphi^T / (rho + phi_i.C.phi_i - ||phi_i||^2)) — the
+    exact inverse of ``incremental_add``. ``i`` must be a concrete int
+    (shape shrinks; host-level)."""
+    Cphi, denom, w_new = _downdate(state, state.Phi[i], state.Y[i])
+    C_new = state.C - jnp.outer(Cphi, Cphi) / denom
+    return LssvmState(
+        jnp.delete(state.Phi, i, axis=0),
+        jnp.delete(state.Y, i, axis=0),
+        w_new, C_new, state.rho,
+    )
 
 
 @jax.jit

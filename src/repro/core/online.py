@@ -64,6 +64,24 @@ def observe(state: OnlineKnnState, x_new, y_new, tau, *, k):
     Returns (new_state, p_value). O(capacity) — O(n) amortized on TPU since
     inert rows are masked arithmetic, not skipped.
     """
+    new_state, p, _ = _observe_impl(state, x_new, y_new, tau, k=k)
+    return new_state, p
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def observe_with_dists(state: OnlineKnnState, x_new, y_new, tau, *, k):
+    """``observe`` that also returns the live-masked distance vector.
+
+    Identical arithmetic to ``observe`` (same p-value bits); the extra
+    return is the (cap,) vector of distances from ``x_new`` to each live
+    row, BIG on inert rows — callers that maintain auxiliary per-pair
+    state (``repro.serving.session`` keeps the pairwise distance matrix
+    for exact decremental eviction) reuse it instead of recomputing.
+    """
+    return _observe_impl(state, x_new, y_new, tau, k=k)
+
+
+def _observe_impl(state: OnlineKnnState, x_new, y_new, tau, *, k):
     cap = state.X.shape[0]
     live = jnp.arange(cap) < state.n
     d = jnp.sqrt(jnp.maximum(
@@ -100,7 +118,7 @@ def observe(state: OnlineKnnState, x_new, y_new, tau, *, k):
         best=merged.at[idx].set(own),
         n=state.n + 1,
     )
-    return new_state, p
+    return new_state, p, d
 
 
 # ---------------------------------------------------------------------------
@@ -142,5 +160,6 @@ def run_stream(X, y, *, k, key, capacity=None):
     return pvals, simple_mixture_log_martingale(pvals)
 
 
-__all__ = ["OnlineKnnState", "init", "observe", "run_stream",
-           "power_martingale_increment", "simple_mixture_log_martingale"]
+__all__ = ["OnlineKnnState", "init", "observe", "observe_with_dists",
+           "run_stream", "power_martingale_increment",
+           "simple_mixture_log_martingale"]

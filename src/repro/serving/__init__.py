@@ -1,0 +1,20 @@
+"""Multi-tenant online conformal-prediction serving.
+
+The paper's incremental&decremental updates make exact full-CP cheap
+enough to serve online; this package turns the repo's single-shot CP
+primitives into a serving system:
+
+* ``session``  — per-tenant capacity-padded CP state with exact
+  decremental eviction (sliding windows) and capacity-doubling growth;
+* ``engine``   — micro-batching ``ServingEngine``: one vmapped jitted
+  step advances every tenant, Pallas-fused read-only queries;
+* ``registry`` — declarative measure registry (k-NN / KDE / LS-SVM and
+  user plug-ins) behind one fit/observe/evict/pvalues surface;
+* ``snapshot`` — crash-safe tenant-state snapshot/restore.
+"""
+from repro.serving.engine import ServingEngine
+from repro.serving.registry import ConformalPredictor, MeasureSpec
+from repro.serving.snapshot import SessionStore
+
+__all__ = ["ServingEngine", "ConformalPredictor", "MeasureSpec",
+           "SessionStore"]

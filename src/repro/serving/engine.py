@@ -1,0 +1,190 @@
+"""Micro-batching multi-tenant online CP engine.
+
+Batches many per-tenant ``serving.session.Session``s into one stacked
+pytree (leading axis = session slot) and advances them all with a single
+fixed-shape jitted ``vmap`` step — the serving form of the paper's O(n)
+online update: one device dispatch per tick regardless of tenant count,
+no retracing as windows fill, slide, or tenants come and go.
+
+Usage::
+
+    from repro.serving.engine import ServingEngine
+
+    eng = ServingEngine(n_sessions=64, capacity=256, dim=16, k=7,
+                        n_labels=2, window=128)
+    state = eng.init_state()
+    for t in range(T):                      # one micro-batch per tick
+        x_t, y_t = traffic_at(t)            # (64, 16), (64,)
+        tau_t = eng.taus(jax.random.PRNGKey(t))
+        state, pvals = eng.observe(state, x_t, y_t, tau_t)  # (64,) smoothed
+    sets = eng.predict(state, x_query)      # (64, m, n_labels) full-CP query
+
+Per-session p-values are bit-identical to running that session's stream
+through ``core.online.run_stream`` alone (tested); sliding-window
+eviction is the exact decremental update of ``serving.session``. The
+read-only ``predict`` routes score-update + counting through the fused
+Pallas kernel (``kernels/cp_update.py``) on TPU.
+
+Tenants with no traffic on a tick are masked via ``active`` (state
+bitwise unchanged, NaN p-value) — the micro-batch shape never changes.
+When no ``window`` is set the engine auto-grows: once any session hits
+capacity, every array doubles (host-side, O(log n) retraces total).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving import session as sess_m
+from repro.serving.session import Session
+
+
+def _session_step(sess, x, y, tau, window, active, *, k):
+    def do(s):
+        return sess_m.observe_sliding(s, x, y, tau, window, k=k)
+
+    def skip(s):
+        return s, jnp.asarray(jnp.nan, dtype=s.knn.X.dtype)
+
+    return jax.lax.cond(active, do, skip, sess)
+
+
+class ServingEngine:
+    """Fixed-slot, fixed-shape multi-tenant CP serving engine.
+
+    Parameters
+    ----------
+    n_sessions: number of tenant slots (the micro-batch width).
+    capacity:   per-session padded training capacity.
+    dim:        feature dimension.
+    k:          k-NN neighbourhood size (paper's simplified k-NN measure).
+    n_labels:   label alphabet for ``predict``.
+    window:     sliding-window length (<= capacity); None => grow mode
+                (capacity doubles when full instead of evicting).
+    """
+
+    def __init__(self, *, n_sessions: int, capacity: int, dim: int, k: int,
+                 n_labels: int = 2, window: int | None = None,
+                 dtype=jnp.float32):
+        if window is not None and window > capacity:
+            raise ValueError(f"window {window} exceeds capacity {capacity}")
+        if window is not None and window < 1:
+            raise ValueError("window must be >= 1")
+        if capacity < k:
+            raise ValueError(f"capacity {capacity} < k {k}")
+        self.n_sessions = n_sessions
+        self.capacity = capacity
+        self.dim = dim
+        self.k = k
+        self.n_labels = n_labels
+        self.window = window
+        self.dtype = dtype
+        step = functools.partial(_session_step, k=k)
+        self._step = jax.jit(
+            jax.vmap(step, in_axes=(0, 0, 0, 0, 0, 0)))
+        self._predict = jax.jit(jax.vmap(functools.partial(
+            sess_m.predict_pvalues, k=k, n_labels=n_labels)))
+        # host-side upper bound on max_s n_s, for grow-mode occupancy
+        # checks without a per-tick device sync
+        self._n_bound: int | None = None
+
+    # -- state --------------------------------------------------------------
+
+    def init_state(self) -> Session:
+        """Stacked Session pytree with a leading (n_sessions,) axis."""
+        one = sess_m.init(self.capacity, self.dim, self.k, dtype=self.dtype)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (self.n_sessions,) + a.shape),
+            one)
+
+    def taus(self, key) -> jnp.ndarray:
+        """One tie-breaking uniform per session slot for this tick."""
+        return jax.random.uniform(key, (self.n_sessions,), dtype=self.dtype)
+
+    def _windows(self, state: Session) -> jnp.ndarray:
+        cap = state.capacity
+        w = cap + 1 if self.window is None else self.window  # +1: never evict
+        return jnp.full((self.n_sessions,), w, dtype=jnp.int32)
+
+    # -- serving ------------------------------------------------------------
+
+    def observe(self, state: Session, x, y, tau, active=None):
+        """One micro-batched tick: learn (x[s], y[s]) in every active slot.
+
+        x: (S, dim); y: (S,); tau: (S,) tie-break uniforms; active: (S,)
+        bool (default all). Returns (state, pvalues (S,)) — NaN p-value on
+        inactive slots. In grow mode, auto-doubles capacity first if any
+        session is full (host-side sync + retrace, O(log n) times total).
+        """
+        if active is None:
+            active = jnp.ones((self.n_sessions,), dtype=bool)
+        if self.window is None:
+            # n grows by at most 1 per tick, so a host counter upper-bounds
+            # occupancy; the true max is synced only at startup and when
+            # the bound reaches capacity (after external state swaps, call
+            # reset_occupancy to re-sync).
+            cap = state.capacity
+            if self._n_bound is None or self._n_bound >= cap:
+                self._n_bound = int(jnp.max(state.knn.n))
+                while self._n_bound >= cap:
+                    state = self.grow(state)
+                    cap = state.capacity
+            self._n_bound += 1
+        return self._step(state, x, y.astype(jnp.int32),
+                          tau.astype(self.dtype), self._windows(state),
+                          active)
+
+    def reset_occupancy(self) -> None:
+        """Forget the host-side occupancy bound (grow mode); the next
+        ``observe`` re-syncs it from device. Call after substituting a
+        state that this engine did not produce."""
+        self._n_bound = None
+
+    def grow(self, state: Session, factor: int = 2) -> Session:
+        """Double every session's capacity (host-side, preserves state).
+
+        ``self.capacity`` follows the grown state so ``meta()`` and
+        ``init_state()`` stay consistent with the states this engine
+        produces."""
+        out = jax.vmap(functools.partial(sess_m.grow, factor=factor))(state)
+        self.capacity = out.capacity
+        return out
+
+    def predict(self, state: Session, X_test) -> jnp.ndarray:
+        """Read-only full-CP p-values per session: (S, m, n_labels).
+
+        X_test: (S, m, dim) per-session query batch, or (m, dim) broadcast
+        to every session. One vmapped jitted dispatch for all sessions;
+        inside it the fused kernel (Pallas on TPU) does the score update
+        + count in a single pass.
+        """
+        if X_test.ndim == 2:
+            X_test = jnp.broadcast_to(
+                X_test, (self.n_sessions,) + X_test.shape)
+        return self._predict(state, X_test)
+
+    # -- snapshot -----------------------------------------------------------
+
+    def meta(self) -> dict[str, Any]:
+        """JSON-serializable engine config, stored alongside snapshots."""
+        return {
+            "n_sessions": self.n_sessions,
+            "capacity": self.capacity,
+            "dim": self.dim,
+            "k": self.k,
+            "n_labels": self.n_labels,
+            "window": self.window,
+            "dtype": jnp.dtype(self.dtype).name,
+        }
+
+    @classmethod
+    def from_meta(cls, meta: dict[str, Any]) -> "ServingEngine":
+        meta = dict(meta)
+        meta["dtype"] = jnp.dtype(meta.get("dtype", "float32"))
+        return cls(**meta)
+
+
+__all__ = ["ServingEngine"]

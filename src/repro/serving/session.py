@@ -1,0 +1,219 @@
+"""Per-tenant capacity-padded CP session with exact decremental eviction.
+
+A ``Session`` wraps ``core.online.OnlineKnnState`` (the paper's incremental
+simplified-k-NN CP state, Section 9) and adds the one piece the pure
+incremental state cannot provide: **exact forgetting**. The paper's
+decremental update (Fig. 1 read backwards) removes a training point in
+O(n) per affected neighbour list — but a neighbour list that loses its
+j-th entry must be backfilled with the (k+1)-th best distance, which the
+k-slot state no longer knows. The session therefore maintains the live
+pairwise distance matrix ``D`` (built incrementally, one row+column per
+``observe`` — the distances are computed once anyway for the p-value), so
+eviction backfills from stored exact distances instead of re-deriving
+them: bit-exact against fit-from-scratch, no O(n^2 p) recompute.
+
+Invariants (all arrays are capacity-padded, fixed-shape, jit-stable):
+
+* rows ``[0, n)`` are live, in arrival order (row 0 is the oldest);
+* ``D[i, j]`` is the Euclidean distance between live rows i and j,
+  computed exactly as ``core.online.observe`` computes it
+  (``sqrt(max(sum((xi-xj)^2), 0))``); BIG on the diagonal, on inert
+  rows/columns, and everywhere eviction has compacted past;
+* ``knn.best`` rows always equal what fit-from-scratch on the current
+  window would produce (the exactness tests assert this bitwise).
+
+``observe`` delegates the p-value + learn step to
+``core.online.observe_with_dists`` so session p-values are bit-identical
+to ``core.online.run_stream``; ``evict_oldest`` is the decremental
+update; ``grow`` doubles capacity host-side (retraces only O(log n)
+times — the capacity-doubling schedule).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import online
+from repro.core.online import BIG, OnlineKnnState
+from repro.kernels import ops as kops
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class Session:
+    """One tenant's sliding-window CP state: k-NN state + live distances."""
+
+    knn: OnlineKnnState  # capacity-padded incremental CP state
+    D: jnp.ndarray  # (cap, cap) live pairwise distances, BIG elsewhere
+
+    def tree_flatten(self):
+        return ((self.knn, self.D), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.D.shape[-1]
+
+
+def init(capacity: int, p: int, k: int, dtype=jnp.float32) -> Session:
+    if capacity < k:
+        raise ValueError(
+            f"capacity {capacity} < k {k}: the k-best machinery (top_k) "
+            "needs at least k rows")
+    return Session(
+        knn=online.init(capacity, p, k, dtype=dtype),
+        D=jnp.full((capacity, capacity), BIG, dtype=dtype),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def observe(sess: Session, x_new, y_new, tau, *, k):
+    """Smoothed p-value for (x_new, y_new), then learn it — one O(cap) step.
+
+    The p-value is bit-identical to ``core.online.observe`` (it *is* that
+    computation); additionally the new point's distance row/column is
+    recorded in ``D`` for later exact eviction. Precondition: n < capacity
+    (callers grow or evict first).
+    """
+    idx = sess.knn.n
+    knn, p, d = online.observe_with_dists(sess.knn, x_new, y_new, tau, k=k)
+    D = sess.D.at[idx, :].set(d).at[:, idx].set(d)
+    return Session(knn, D), p
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def evict_oldest(sess: Session, *, k) -> Session:
+    """Exact decremental update: forget the oldest live point.
+
+    Paper's decremental rule: only points whose same-label k-neighbourhood
+    contained the evicted point are affected; each backfills from the
+    (k+1)-th best — here recovered from the maintained ``D``, so the
+    result is bit-exact vs. refitting on the remaining window. Rows are
+    compacted down by one to keep the arrival-order invariant.
+    Precondition: n >= 1 (guarded by callers; under vmap+select the n=0
+    lanes compute garbage that the caller's select discards).
+    """
+    knn = sess.knn
+    cap = knn.X.shape[0]
+    live = jnp.arange(cap) < knn.n
+
+    # which survivors held the evicted point in their k-best list?
+    # d(i, evicted) <= kth  <=>  it is among i's k smallest same-label
+    # distances (tie-robust: removing any one occurrence of a tied value
+    # leaves the same remaining multiset, and we recompute from D).
+    dcol = sess.D[:, 0]
+    kth = knn.best[:, -1]
+    affected = (knn.y == knn.y[0]) & live & (dcol <= kth)
+
+    # compact every array down one row (and D one column)
+    def shift(a, fill):
+        return jnp.concatenate([a[1:], jnp.full_like(a[:1], fill)], axis=0)
+
+    Xs = shift(knn.X, 0)
+    ys = shift(knn.y, -1)
+    bests = shift(knn.best, BIG)
+    Ds = shift(sess.D, BIG)
+    Ds = jnp.concatenate(
+        [Ds[:, 1:], jnp.full_like(Ds[:, :1], BIG)], axis=1)
+    aff = shift(affected, False)
+
+    # backfill affected rows: exact k-best over the remaining window,
+    # straight from the stored distances (inert/diagonal entries are BIG)
+    n2 = knn.n - 1
+    live2 = jnp.arange(cap) < n2
+    Dm = jnp.where(
+        (ys[:, None] == ys[None, :]) & live2[None, :], Ds, BIG)
+    rec = jnp.sort(-jax.lax.top_k(-Dm, k)[0], axis=1)
+    best2 = jnp.where(aff[:, None], rec, bests)
+    return Session(OnlineKnnState(Xs, ys, best2, n2), Ds)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def observe_sliding(sess: Session, x_new, y_new, tau, window, *, k):
+    """Evict-if-full then observe: one fixed-shape sliding-window step.
+
+    ``window`` is a traced scalar (per-tenant window sizes never retrace).
+    Under vmap the conds lower to selects — both branches run, lanes that
+    don't evict keep their state bitwise unchanged.
+    """
+    sess = jax.lax.cond(
+        sess.knn.n >= window,
+        lambda s: evict_oldest(s, k=k),
+        lambda s: s,
+        sess,
+    )
+    return observe(sess, x_new, y_new, tau, k=k)
+
+
+def grow(sess: Session, factor: int = 2) -> Session:
+    """Double (by default) capacity host-side, preserving all live state.
+
+    Shapes change, so jitted steps retrace — but only O(log n) times over
+    a session's lifetime, the capacity-doubling schedule. Not jittable.
+    """
+    cap = sess.capacity
+    extra = cap * (factor - 1)
+    knn = sess.knn
+    return Session(
+        knn=OnlineKnnState(
+            X=jnp.pad(knn.X, ((0, extra), (0, 0))),
+            y=jnp.pad(knn.y, (0, extra), constant_values=-1),
+            best=jnp.pad(knn.best, ((0, extra), (0, 0)),
+                         constant_values=BIG),
+            n=knn.n,
+        ),
+        D=jnp.pad(sess.D, ((0, extra), (0, extra)), constant_values=BIG),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_labels"))
+def predict_pvalues(sess: Session, X_test, *, k, n_labels):
+    """Read-only full-CP query: p-values (m, n_labels) for every label.
+
+    Hot path: candidate scores via one masked top-k, then the fused
+    score-update + count through ``kernels.ops.cp_knn_counts`` (the
+    Pallas kernel on TPU). Inert rows carry a -BIG sentinel so they are
+    never counted regardless of the padded capacity.
+
+    Rows whose k-best list is not full (label rarer than k in the
+    window) are excluded from the kernel and counted caller-side: the
+    kernel's ``sums - kth + d`` update would subtract the BIG padding
+    sentinel and swallow the finite part in f32. The caller-side path
+    uses the cancellation-safe ``base + (kth or d)`` form of
+    ``measures.knn._updated_scores``, so rare labels stay exact.
+    """
+    knn = sess.knn
+    cap = knn.X.shape[0]
+    live = jnp.arange(cap) < knn.n
+
+    d = jnp.sqrt(jnp.maximum(kops.sq_dists(X_test, knn.X), 0.0))  # (m, cap)
+    labels = jnp.arange(n_labels, dtype=knn.y.dtype)
+    same = (knn.y[None, :] == labels[:, None]) & live[None, :]  # (l, cap)
+    dm = jnp.where(same[None], d[:, None, :], BIG)  # (m, l, cap)
+    alpha = jnp.sum(-jax.lax.top_k(-dm, k)[0], axis=-1)  # (m, l)
+
+    kth = knn.best[:, -1]
+    full = live & (kth < BIG)  # k-best list fully populated
+    sum_same = jnp.where(full, jnp.sum(knn.best, axis=1), -BIG)
+    kth_same = jnp.where(full, kth, -BIG)
+    counts = kops.cp_knn_counts(
+        knn.X, jnp.where(live, knn.y, -1), sum_same, kth_same, X_test,
+        alpha, n_labels)
+
+    deficient = live & (kth >= BIG)
+    base = jnp.sum(knn.best[:, :-1], axis=1)  # (cap,)
+    upd = same[None] & (d[:, None, :] < kth)  # (m, l, cap)
+    scores = base + jnp.where(upd, d[:, None, :], kth)
+    ge = (scores >= alpha[..., None]) & deficient[None, None, :]
+    counts = counts + jnp.sum(ge.astype(counts.dtype), axis=-1)
+    return (counts + 1.0) / (knn.n + 1.0)
+
+
+__all__ = ["Session", "init", "observe", "evict_oldest", "observe_sliding",
+           "grow", "predict_pvalues"]

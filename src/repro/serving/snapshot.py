@@ -1,0 +1,95 @@
+"""Tenant-state snapshot/restore for the serving engine.
+
+Wires ``serving.engine`` state through ``checkpoint.store.CheckpointStore``
+so tenant CP state survives process restarts: atomic commit (a crash
+mid-write can never corrupt the latest snapshot), per-shard checksums,
+async double-buffered writes. The engine config travels in the
+manifest's ``extra`` field, so ``restore_engine`` can rebuild the whole
+serving stack from a bare directory::
+
+    store = SessionStore("/var/lib/cp-serving")
+    store.save(step, state, meta=engine.meta())     # during serving
+    ...
+    engine, state, step = SessionStore(root).restore_engine()  # on restart
+
+Restore is self-describing: the target pytree is reconstructed from the
+manifest's leaf shapes (capacity growth between snapshots is fine — the
+restored engine adopts the snapshot's capacity, not the configured one).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.checkpoint.store import CheckpointStore
+from repro.core.online import OnlineKnnState
+from repro.serving.engine import ServingEngine
+from repro.serving.session import Session
+
+
+def _like_from_manifest(manifest: dict) -> Session:
+    """Zero-filled Session (possibly batched) matching the saved leaves."""
+    specs = manifest["leaves"]
+    if len(specs) != 5:
+        raise ValueError(
+            f"snapshot has {len(specs)} leaves; a Session has 5 "
+            "(X, y, best, n, D) — not a serving snapshot?")
+    X, y, best, n, D = (
+        jnp.zeros(tuple(s["shape"]), dtype=s["dtype"]) for s in specs)
+    return Session(OnlineKnnState(X, y, best, n), D)
+
+
+class SessionStore:
+    """Crash-safe snapshot store for (batched) serving sessions."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self._store = CheckpointStore(root, keep=keep)
+
+    def save(self, step: int, state: Session, *, meta: dict | None = None,
+             blocking: bool = False) -> None:
+        """Snapshot ``state``; ``meta`` (e.g. ``engine.meta()``) rides in
+        the manifest. Async by default — call ``wait()`` before exit."""
+        self._store.save(step, state, blocking=blocking, extra=meta or {})
+
+    def wait(self) -> None:
+        self._store.wait()
+
+    def latest_step(self) -> int | None:
+        return self._store.latest_step()
+
+    def restore(self, step: int | None = None
+                ) -> tuple[Session, int, dict[str, Any]]:
+        """Load (state, step, meta) — target shapes come from the manifest."""
+        step = step if step is not None else self._store.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed snapshots in {self.root}")
+        manifest = self._store.read_manifest(step)
+        like = _like_from_manifest(manifest)
+        state, step = self._store.restore(like, step)
+        return state, step, manifest.get("extra", {})
+
+    def restore_engine(self, step: int | None = None
+                       ) -> tuple[ServingEngine, Session, int]:
+        """Rebuild the engine *and* its state from the latest snapshot.
+
+        Geometry (n_sessions, capacity, dim) is taken from the saved
+        arrays; k / n_labels / window / dtype from the saved meta.
+        """
+        state, step, meta = self.restore(step)
+        if "k" not in meta:
+            raise ValueError(
+                f"snapshot step {step} carries no engine meta (saved "
+                "without meta=engine.meta()?) — use restore() and "
+                "construct the ServingEngine yourself")
+        meta = {
+            **meta,
+            "n_sessions": int(state.D.shape[0]),
+            "capacity": int(state.D.shape[-1]),
+            "dim": int(state.knn.X.shape[-1]),
+        }
+        return ServingEngine.from_meta(meta), state, step
+
+
+__all__ = ["SessionStore"]

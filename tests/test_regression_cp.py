@@ -4,7 +4,9 @@ sweep == brute-force grid evaluation; ICP regression covers.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import regression as reg
 from repro.data.synthetic import make_regression

@@ -1,0 +1,393 @@
+"""repro.serving: exactness + engine + snapshot + registry.
+
+The acceptance-critical properties:
+* decremental eviction (+ incremental re-add) is BIT-exact against
+  fit-from-scratch on the same window;
+* N vmapped engine sessions produce BIT-identical p-values to N
+  sequential ``core.online.run_stream`` calls.
+"""
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import online
+from repro.core.measures import kde as kde_m
+from repro.core.measures import knn as knn_m
+from repro.core.measures import lssvm as lssvm_m
+from repro.data.synthetic import make_classification
+from repro.serving import (ConformalPredictor, ServingEngine, SessionStore,
+                           registry)
+from repro.serving import session as sm
+
+K, DIM = 5, 6
+
+
+def _stream(T, seed, dim=DIM):
+    X, y = make_classification(n_samples=T, n_features=dim, seed=seed)
+    taus = jax.random.uniform(jax.random.PRNGKey(seed), (T,),
+                              dtype=jnp.float32)
+    return jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.int32), taus
+
+
+def _fill(sess, X, y, taus, lo=0, hi=None):
+    ps = []
+    for t in range(lo, hi if hi is not None else X.shape[0]):
+        sess, p = sm.observe(sess, X[t], y[t], taus[t], k=K)
+        ps.append(float(p))
+    return sess, ps
+
+
+# ---------------------------------------------------------------------------
+# session exactness
+# ---------------------------------------------------------------------------
+
+
+def test_session_observe_matches_run_stream_bitwise():
+    T, cap = 40, 64
+    X, y, taus = _stream(T, seed=0)
+    want, _ = online.run_stream(X, y, k=K, key=jax.random.PRNGKey(0),
+                                capacity=cap)
+    _, got = _fill(sm.init(cap, DIM, K), X, y, taus)
+    np.testing.assert_array_equal(np.asarray(want),
+                                  np.array(got, np.float32))
+
+
+@pytest.mark.parametrize("seed,evictions", [(1, 1), (2, 9), (3, 17)])
+def test_evict_plus_readd_equals_fit_from_scratch(seed, evictions):
+    """Eviction then incremental re-add == fresh fit on the same window."""
+    T, cap = 36, 64
+    X, y, taus = _stream(T, seed=seed)
+    sess, _ = _fill(sm.init(cap, DIM, K), X, y, taus, hi=T - 5)
+    for _ in range(evictions):
+        sess = sm.evict_oldest(sess, k=K)
+    sess, _ = _fill(sess, X, y, taus, lo=T - 5)  # incremental re-add
+
+    scratch, _ = _fill(sm.init(cap, DIM, K), X, y, taus, lo=evictions)
+    n = int(sess.knn.n)
+    assert n == T - evictions == int(scratch.knn.n)
+    np.testing.assert_array_equal(np.asarray(sess.knn.X),
+                                  np.asarray(scratch.knn.X))
+    np.testing.assert_array_equal(np.asarray(sess.knn.best),
+                                  np.asarray(scratch.knn.best))
+    # and the *next* smoothed p-value agrees bitwise
+    xq, yq, tq = X[0], y[0], jnp.float32(0.37)
+    _, pa = sm.observe(sess, xq, yq, tq, k=K)
+    _, pb = sm.observe(scratch, xq, yq, tq, k=K)
+    assert float(pa) == float(pb)
+
+
+def test_sliding_window_equals_refit_each_window():
+    T, cap, w = 40, 64, 12
+    X, y, taus = _stream(T, seed=4)
+    sl = sm.init(cap, DIM, K)
+    for t in range(T):
+        sl, _ = sm.observe_sliding(sl, X[t], y[t], taus[t], jnp.int32(w),
+                                   k=K)
+    ref, _ = _fill(sm.init(cap, DIM, K), X, y, taus, lo=T - w)
+    assert int(sl.knn.n) == w
+    np.testing.assert_array_equal(np.asarray(sl.knn.best),
+                                  np.asarray(ref.knn.best))
+
+
+def test_grow_preserves_state_bitwise():
+    T, cap = 20, 32
+    X, y, taus = _stream(T, seed=5)
+    sess, _ = _fill(sm.init(cap, DIM, K), X, y, taus)
+    g = sm.grow(sess)
+    assert g.capacity == 2 * cap and int(g.knn.n) == T
+    _, pa = sm.observe(g, X[0], y[0], jnp.float32(0.5), k=K)
+    _, pb = sm.observe(sess, X[0], y[0], jnp.float32(0.5), k=K)
+    assert float(pa) == float(pb)
+
+
+def test_predict_pvalues_matches_optimized_knn():
+    T, cap = 40, 64
+    X, y, taus = _stream(T, seed=6)
+    sess, _ = _fill(sm.init(cap, DIM, K), X, y, taus)
+    Xt, _, _ = _stream(8, seed=60)
+    got = sm.predict_pvalues(sess, Xt, k=K, n_labels=2)
+    st = knn_m.fit(X, y, k=K)
+    want = knn_m.pvalues_optimized(st, Xt, k=K, simplified=True, n_labels=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@pytest.mark.parametrize("rare_count", [K - 2, K, K + 1])
+def test_predict_pvalues_exact_with_rare_label(rare_count):
+    """Labels rarer than (or equal to) k: the BIG-padded neighbour lists
+    must not go through the kernel's cancellation-prone update."""
+    T, cap = 24, 32
+    X, _, taus = _stream(T, seed=11)
+    y = jnp.asarray([1 if t < rare_count else 0 for t in range(T)],
+                    jnp.int32)
+    sess = sm.init(cap, DIM, K)
+    for t in range(T):
+        sess, _ = sm.observe(sess, X[t], y[t], taus[t], k=K)
+    Xt, _, _ = _stream(6, seed=12)
+    got = sm.predict_pvalues(sess, Xt, k=K, n_labels=2)
+    st = knn_m.fit(X, y, k=K)
+    want = knn_m.pvalues_optimized(st, Xt, k=K, simplified=True, n_labels=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+
+def test_engine_vmapped_equals_sequential_run_stream_bitwise():
+    """N concurrent engine sessions == N independent run_stream calls."""
+    S, T = 4, 30
+    streams = [_stream(T, seed=100 + s) for s in range(S)]
+    eng = ServingEngine(n_sessions=S, capacity=8, dim=DIM, k=K, n_labels=2)
+    state = eng.init_state()  # grow mode: auto-doubles 8 -> 32
+    got = np.zeros((S, T), np.float32)
+    for t in range(T):
+        state, p = eng.observe(
+            state,
+            jnp.stack([st[0][t] for st in streams]),
+            jnp.stack([st[1][t] for st in streams]),
+            jnp.stack([st[2][t] for st in streams]))
+        got[:, t] = np.asarray(p)
+    assert state.capacity == 32  # capacity-doubling happened
+    for s, (X, y, _) in enumerate(streams):
+        want, _ = online.run_stream(X, y, k=K,
+                                    key=jax.random.PRNGKey(100 + s),
+                                    capacity=T)
+        np.testing.assert_array_equal(np.asarray(want), got[s])
+
+
+def test_engine_sliding_equals_sequential_sessions_bitwise():
+    S, T, cap, w = 3, 25, 32, 10
+    streams = [_stream(T, seed=200 + s) for s in range(S)]
+    eng = ServingEngine(n_sessions=S, capacity=cap, dim=DIM, k=K,
+                        n_labels=2, window=w)
+    state = eng.init_state()
+    got = np.zeros((S, T), np.float32)
+    for t in range(T):
+        state, p = eng.observe(
+            state,
+            jnp.stack([st[0][t] for st in streams]),
+            jnp.stack([st[1][t] for st in streams]),
+            jnp.stack([st[2][t] for st in streams]))
+        got[:, t] = np.asarray(p)
+    for s, (X, y, taus) in enumerate(streams):
+        sl = sm.init(cap, DIM, K)
+        for t in range(T):
+            sl, p = sm.observe_sliding(sl, X[t], y[t], taus[t],
+                                       jnp.int32(w), k=K)
+            assert float(p) == got[s, t]
+
+
+def test_engine_active_masking_freezes_inactive_slots():
+    S = 4
+    streams = [_stream(3, seed=300 + s) for s in range(S)]
+    eng = ServingEngine(n_sessions=S, capacity=16, dim=DIM, k=K, n_labels=2)
+    state = eng.init_state()
+    active = jnp.array([True, False, True, False])
+    state, p = eng.observe(
+        state,
+        jnp.stack([st[0][0] for st in streams]),
+        jnp.stack([st[1][0] for st in streams]),
+        jnp.stack([st[2][0] for st in streams]),
+        active=active)
+    p = np.asarray(p)
+    assert not np.isnan(p[0]) and np.isnan(p[1])
+    assert list(np.asarray(state.knn.n)) == [1, 0, 1, 0]
+
+
+def test_engine_predict_shapes_and_window_rejection():
+    eng = ServingEngine(n_sessions=2, capacity=16, dim=DIM, k=K, n_labels=3,
+                        window=16)
+    state = eng.init_state()
+    X, y, taus = _stream(8, seed=7)
+    for t in range(8):
+        state, _ = eng.observe(state, jnp.stack([X[t], X[t]]),
+                               jnp.stack([y[t], y[t]]),
+                               jnp.stack([taus[t], taus[t]]))
+    p = eng.predict(state, X[:5])  # (m, dim) broadcast across sessions
+    assert p.shape == (2, 5, 3)
+    np.testing.assert_array_equal(np.asarray(p[0]), np.asarray(p[1]))
+    with pytest.raises(ValueError):
+        ServingEngine(n_sessions=1, capacity=8, dim=DIM, k=K, window=9)
+
+
+# ---------------------------------------------------------------------------
+# snapshot
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_roundtrip_and_engine_restore():
+    S, T = 3, 12
+    streams = [_stream(T, seed=400 + s) for s in range(S)]
+    eng = ServingEngine(n_sessions=S, capacity=16, dim=DIM, k=K,
+                        n_labels=2, window=8)
+    state = eng.init_state()
+    for t in range(T):
+        state, _ = eng.observe(
+            state,
+            jnp.stack([st[0][t] for st in streams]),
+            jnp.stack([st[1][t] for st in streams]),
+            jnp.stack([st[2][t] for st in streams]))
+    with tempfile.TemporaryDirectory() as d:
+        SessionStore(d).save(T, state, meta=eng.meta(), blocking=True)
+        eng2, state2, step = SessionStore(d).restore_engine()
+        assert step == T
+        assert (eng2.k, eng2.window, eng2.capacity) == (K, 8, 16)
+        for a, b in zip(jax.tree_util.tree_leaves(state),
+                        jax.tree_util.tree_leaves(state2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # restored engine continues bit-identically
+        x = jnp.stack([st[0][0] for st in streams])
+        y = jnp.stack([st[1][0] for st in streams])
+        tau = jnp.stack([st[2][0] for st in streams])
+        _, pa = eng.observe(state, x, y, tau)
+        _, pb = eng2.observe(state2, x, y, tau)
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+def test_restore_engine_without_meta_raises_clearly():
+    eng = ServingEngine(n_sessions=2, capacity=8, dim=DIM, k=K)
+    with tempfile.TemporaryDirectory() as d:
+        SessionStore(d).save(1, eng.init_state(), blocking=True)  # no meta
+        store = SessionStore(d)
+        state, step, meta = store.restore()  # plain restore still works
+        assert step == 1 and meta == {}
+        with pytest.raises(ValueError, match="no engine meta"):
+            store.restore_engine()
+
+
+# ---------------------------------------------------------------------------
+# measure registry + decremental measures
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("i", [0, 7, 34, -1])
+def test_knn_decremental_remove_exact(i):
+    X, y = make_classification(n_samples=35, n_features=DIM, n_classes=3,
+                               seed=2)
+    X, y = jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.int32)
+    got = knn_m.decremental_remove(knn_m.fit(X, y, k=K), i, k=K)
+    want = knn_m.fit(jnp.delete(X, i, axis=0), jnp.delete(y, i, axis=0),
+                     k=K)
+    np.testing.assert_array_equal(np.asarray(got.best_same),
+                                  np.asarray(want.best_same))
+    np.testing.assert_array_equal(np.asarray(got.best_diff),
+                                  np.asarray(want.best_diff))
+
+
+def test_kde_decremental_remove_matches_refit():
+    X, y = make_classification(n_samples=30, n_features=DIM, n_classes=3,
+                               seed=3)
+    X, y = jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.int32)
+    st = kde_m.fit(X, y, h=1.1, n_labels=3)
+    got = kde_m.decremental_remove(st, 3, h=1.1)
+    want = kde_m.fit(jnp.delete(X, 3, axis=0), jnp.delete(y, 3, axis=0),
+                     h=1.1, n_labels=3)
+    np.testing.assert_allclose(np.asarray(got.prelim),
+                               np.asarray(want.prelim), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got.class_counts),
+                                  np.asarray(want.class_counts))
+
+
+def test_kde_incremental_add_matches_refit():
+    X, y = make_classification(n_samples=25, n_features=DIM, seed=8)
+    X, y = jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.int32)
+    st = kde_m.fit(X[:24], y[:24], h=0.9, n_labels=2)
+    got = kde_m.incremental_add(st, X[24], y[24], h=0.9)
+    want = kde_m.fit(X, y, h=0.9, n_labels=2)
+    np.testing.assert_allclose(np.asarray(got.prelim),
+                               np.asarray(want.prelim), atol=1e-5)
+
+
+def test_lssvm_decremental_remove_matches_refit_and_roundtrip():
+    X, y = make_classification(n_samples=30, n_features=DIM, seed=9)
+    X = jnp.asarray(X, jnp.float32)
+    Y = jnp.asarray(2.0 * y - 1.0, jnp.float32)
+    st = lssvm_m.fit(X, Y, 1.0)
+    got = lssvm_m.decremental_remove(st, 4)
+    want = lssvm_m.fit(jnp.delete(X, 4, axis=0), jnp.delete(Y, 4, axis=0),
+                       1.0)
+    np.testing.assert_allclose(np.asarray(got.w), np.asarray(want.w),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got.C), np.asarray(want.C),
+                               atol=1e-4)
+    up = lssvm_m.incremental_add(st, X[0] * 0.5 + 1.0, jnp.float32(1.0))
+    back = lssvm_m.decremental_remove(up, 30)
+    np.testing.assert_allclose(np.asarray(back.w), np.asarray(st.w),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(back.C), np.asarray(st.C),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("measure", ["knn", "simplified_knn", "kde",
+                                     "lssvm"])
+def test_conformal_predictor_fit_observe_evict_pvalues(measure):
+    X, y = make_classification(n_samples=40, n_features=DIM, seed=1)
+    cp = ConformalPredictor(measure).fit(X[:30], y[:30])
+    cp.observe(jnp.asarray(X[30], jnp.float32), int(y[30]))
+    assert cp.n == 31
+    cp.evict(0)
+    assert cp.n == 30
+    p = cp.pvalues(jnp.asarray(X[31:35], jnp.float32))
+    assert p.shape == (4, 2)
+    assert float(jnp.min(p)) > 0.0 and float(jnp.max(p)) <= 1.0
+    sets = cp.predict_set(jnp.asarray(X[31:35], jnp.float32), eps=0.05)
+    assert sets.dtype == bool
+
+
+def test_lssvm_measure_rejects_multiclass():
+    X, y = make_classification(n_samples=20, n_features=DIM, n_classes=3,
+                               seed=4)
+    with pytest.raises(ValueError, match="binary"):
+        ConformalPredictor("lssvm", n_labels=3).fit(X, y)
+    with pytest.raises(ValueError, match="labels in \\{0, 1\\}"):
+        ConformalPredictor("lssvm").fit(X, y)  # labels {0,1,2}, n_labels=2
+    cp = ConformalPredictor("lssvm").fit(X[:10], np.asarray(y[:10]) % 2)
+    with pytest.raises(ValueError, match="labels in \\{0, 1\\}"):
+        cp.observe(jnp.asarray(X[10], jnp.float32), 2)
+
+
+def test_engine_grow_keeps_meta_capacity_in_sync():
+    eng = ServingEngine(n_sessions=2, capacity=8, dim=DIM, k=K, n_labels=2)
+    state = eng.init_state()
+    X, y, taus = _stream(20, seed=13)
+    for t in range(20):  # forces auto-growth past capacity 8
+        state, _ = eng.observe(state, jnp.stack([X[t], X[t]]),
+                               jnp.stack([y[t], y[t]]),
+                               jnp.stack([taus[t], taus[t]]))
+    assert state.capacity > 8
+    assert eng.meta()["capacity"] == state.capacity
+    assert eng.init_state().capacity == state.capacity
+    with pytest.raises(ValueError, match="capacity"):
+        ServingEngine(n_sessions=1, capacity=K - 1, dim=DIM, k=K)
+
+
+def test_registry_custom_measure_plugs_in():
+    spec = registry.MeasureSpec(
+        name="_test_mean_dist",
+        fit=lambda X, y, hp: ((X, y), None),
+        observe=lambda st, ctx, x, y, hp: (
+            jnp.concatenate([st[0], x[None]]),
+            jnp.concatenate([st[1], jnp.asarray([y], st[1].dtype)])),
+        evict=lambda st, ctx, i, hp: (jnp.delete(st[0], i, axis=0),
+                                      jnp.delete(st[1], i, axis=0)),
+        pvalues=lambda st, ctx, Xt, hp: jnp.full(
+            (Xt.shape[0], hp["n_labels"]), 0.5),
+        defaults={"n_labels": 2},
+    )
+    registry.register(spec)
+    try:
+        assert "_test_mean_dist" in registry.available()
+        cp = ConformalPredictor("_test_mean_dist")
+        X, y = make_classification(n_samples=10, n_features=DIM, seed=0)
+        cp.fit(X, y)
+        cp.observe(jnp.asarray(X[0], jnp.float32), int(y[0]))
+        cp.evict(0)
+        assert cp.pvalues(jnp.asarray(X[:3], jnp.float32)).shape == (3, 2)
+        with pytest.raises(TypeError):
+            ConformalPredictor("_test_mean_dist", bogus=1)
+    finally:
+        registry._REGISTRY.pop("_test_mean_dist", None)
