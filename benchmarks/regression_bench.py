@@ -1,0 +1,136 @@
+"""Streaming regression-CP benchmark: per-test-point interval latency of
+the standard path (Papadopoulos et al. 2011, O(n^2 p) per point) vs the
+paper's optimized path vs the multi-tenant streaming engine, plus the
+engine's observe throughput. Writes BENCH_regression.json.
+
+    PYTHONPATH=src python benchmarks/regression_bench.py [--quick]
+
+The paper's Section 8.1 claim is the middle column: after the one-off
+O(n^2) fit, each test point costs an O(n p) distance row + O(n log n)
+sweep instead of an O(n^2 p) neighbour recomputation — the streaming
+engine serves exactly that path (and stays bit-identical to it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, repeats=3):
+    out = fn()
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def run(ns=(512, 2048), *, m=8, dim=16, k=7, eps=0.1, sessions=4,
+        obs_ticks=64):
+    from repro.core import regression as reg
+    from repro.data.synthetic import make_regression
+    from repro.regression import RegressionServingEngine
+    from repro.regression import stream as rstream
+
+    results = []
+    for n in ns:
+        X, y = make_regression(n_samples=n + m, n_features=dim, seed=0)
+        X = jnp.asarray(X, jnp.float32)
+        y = jnp.asarray(y, jnp.float32)
+        Xtr, ytr, Xt = X[:n], y[:n], X[n:]
+
+        t_std, iv_std = _timeit(lambda: reg.intervals_standard(
+            Xtr, ytr, Xt, k=k, epsilon=eps))
+
+        t_fit, state = _timeit(lambda: reg.fit(Xtr, ytr, k=k))
+        t_opt, iv_opt = _timeit(lambda: reg.intervals_optimized(
+            state, Xt, k=k, epsilon=eps))
+
+        # streaming engine: sessions tenants, each holding the same window
+        eng = RegressionServingEngine(
+            n_sessions=sessions, capacity=n, dim=dim, k=k, window=n)
+        one = rstream.from_fit(Xtr, ytr, k=k, capacity=n)
+        st = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (sessions,) + a.shape), one)
+        t_serve, iv_serve = _timeit(lambda: eng.intervals(st, Xt, eps))
+
+        # engine observe throughput (sliding window, all tenants, 1 tick)
+        key = jax.random.PRNGKey(1)
+        xs = jax.random.normal(key, (obs_ticks, sessions, dim), jnp.float32)
+        ys_ = jax.random.normal(key, (obs_ticks, sessions), jnp.float32)
+        taus = eng.taus(key)
+        st2, _ = eng.observe(st, xs[0], ys_[0], taus)  # compile
+        jax.block_until_ready(st2.n)
+        t0 = time.perf_counter()
+        for t in range(1, obs_ticks):
+            st2, p = eng.observe(st2, xs[t], ys_[t], taus)
+        jax.block_until_ready(p)
+        dt_obs = time.perf_counter() - t0
+
+        per_std = t_std / m
+        per_opt = t_opt / m
+        per_serve = t_serve / (m * sessions)
+        row = {
+            "n": n, "m": m, "dim": dim, "k": k, "epsilon": eps,
+            "sessions": sessions,
+            "fit_wall_s": t_fit,
+            "standard_s_per_test_point": per_std,
+            "optimized_s_per_test_point": per_opt,
+            "streaming_s_per_test_point": per_serve,
+            "speedup_optimized_vs_standard": per_std / per_opt,
+            "speedup_streaming_vs_standard": per_std / per_serve,
+            "observe_session_steps_per_s":
+                sessions * (obs_ticks - 1) / dt_obs,
+            "intervals_finite_frac": float(np.mean(np.isfinite(
+                np.asarray(iv_serve)))),
+            "optimized_equals_standard": bool(np.allclose(
+                np.asarray(iv_std), np.asarray(iv_opt), equal_nan=True)),
+            "streaming_bit_identical_to_optimized": bool(
+                all(np.asarray(iv_serve[s]).tobytes()
+                    == np.asarray(iv_opt).tobytes()
+                    for s in range(sessions))),
+        }
+        results.append(row)
+        print(f"[regression_bench] n={n:5d}  std {per_std * 1e3:8.2f} ms/pt"
+              f"  opt {per_opt * 1e3:8.2f} ms/pt"
+              f" ({row['speedup_optimized_vs_standard']:6.1f}x)"
+              f"  served {per_serve * 1e3:8.2f} ms/pt"
+              f" ({row['speedup_streaming_vs_standard']:6.1f}x)"
+              f"  bitexact={row['streaming_bit_identical_to_optimized']}")
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_regression.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="single small config (CI smoke)")
+    ap.add_argument("--sessions", type=int, default=4)
+    args = ap.parse_args(argv)
+    ns = (256,) if args.quick else (512, 2048)
+    results = run(ns, m=4 if args.quick else 8, sessions=args.sessions)
+    payload = {
+        "bench": "regression_intervals",
+        "backend": jax.default_backend(),
+        "device": str(jax.devices()[0]),
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[regression_bench] wrote {args.out}")
+    for row in results:
+        if not row["intervals_finite_frac"] > 0:
+            raise SystemExit("served intervals are not finite")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -23,11 +23,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.core import distributed as dist  # noqa: E402
 from repro.core.measures import knn as knn_m  # noqa: E402
 from repro.data.synthetic import make_classification  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
 
 
 def main():
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
 
     n, m = 20_000, 16

@@ -1,0 +1,58 @@
+"""Streaming prediction intervals (paper Section 8.1, served online).
+
+    PYTHONPATH=src python examples/streaming_regression.py
+
+Feeds several tenants' regression streams through the multi-tenant
+``RegressionServingEngine`` — each tick is the paper's incremental (and,
+once the sliding window fills, decremental) k-NN regression update, one
+vmapped jitted dispatch for all tenants — then reads exact full-CP
+prediction intervals and checks empirical coverage. The served intervals
+are bit-identical to refitting ``core.regression`` from scratch on each
+window; the engine just never pays the refit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.regression import RegressionServingEngine
+
+
+def main():
+    S, T, dim, k, window, eps = 4, 300, 2, 7, 128, 0.2
+    key = jax.random.PRNGKey(0)
+    kw, kx, kn = jax.random.split(key, 3)
+
+    # tenant s observes y = <w_s, x> + noise
+    W = jax.random.normal(kw, (S, dim), jnp.float32)
+    X = jax.random.normal(kx, (S, T, dim), jnp.float32)
+    y = jnp.einsum("sd,std->st", W, X) \
+        + 0.1 * jax.random.normal(kn, (S, T), jnp.float32)
+
+    eng = RegressionServingEngine(n_sessions=S, capacity=window + 1,
+                                  dim=dim, k=k, window=window)
+    state = eng.init_state()
+
+    hits = np.zeros(S)
+    total = 0
+    for t in range(T):
+        if t >= window:  # price the next point before learning it
+            iv = np.asarray(eng.intervals(state, X[:, t][:, None], eps))
+            yt = np.asarray(y[:, t])
+            hits += (yt >= iv[:, 0, 0]) & (yt <= iv[:, 0, 1])
+            total += 1
+        tau = eng.taus(jax.random.fold_in(key, t))
+        state, _ = eng.observe(state, X[:, t], y[:, t], tau)
+
+    iv = np.asarray(eng.intervals(state, X[:, -8:][0], eps))
+    print(f"[streaming_regression] {S} tenants x {T} steps "
+          f"(window {window}, eps {eps})")
+    for s in range(S):
+        cov = hits[s] / total
+        print(f"  tenant {s}: coverage {cov:.3f} (target >= {1 - eps:.2f}),"
+              f" last interval [{iv[s, -1, 0]:7.2f}, {iv[s, -1, 1]:7.2f}]")
+    assert (hits / total >= 1 - eps - 0.08).all(), hits / total
+    print("[streaming_regression] OK — streamed intervals cover")
+
+
+if __name__ == "__main__":
+    main()

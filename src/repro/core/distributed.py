@@ -36,6 +36,19 @@ from repro.core.measures.knn import KnnState
 
 BIG = 1e30
 
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+
+else:  # jax 0.4.x: experimental location, check_rep instead of check_vma
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
 
 # ---------------------------------------------------------------------------
 # calibration-state sharding
@@ -93,7 +106,9 @@ def _global_k_best(local_d, mask, k, row_axes):
     Local top-k (O(n_local)) -> all-gather (D*k values) -> top-k again.
     """
     cand = jnp.where(mask, local_d, BIG)
-    local_best = -jax.lax.top_k(-cand, k)[0]  # (k,) ascending? descending neg
+    # top_k sorts -cand descending, so the negation is ascending (asserted
+    # by tests/test_regression_stream.py::test_topk_negation_is_ascending)
+    local_best = -jax.lax.top_k(-cand, k)[0]  # (k,) ascending
     gathered = jax.lax.all_gather(local_best, row_axes, tiled=True)  # (D*k,)
     return -jax.lax.top_k(-gathered, k)[0]
 
@@ -161,9 +176,7 @@ def make_knn_pvalues_fn(mesh, *, k: int, simplified: bool, n_labels: int,
     out_spec = (P(cfg.query_axis, None) if cfg.query_axis
                 else P(None, None))
 
-    sharded = jax.shard_map(
-        local_counts, mesh=mesh, in_specs=in_specs, out_specs=out_spec,
-        check_vma=False)
+    sharded = _shard_map(local_counts, mesh, in_specs, out_spec)
 
     @jax.jit
     def pvalues(state: KnnState, X_test):
@@ -224,9 +237,7 @@ def make_kde_pvalues_fn(mesh, *, h: float, p_dim: int, n_labels: int,
     out_spec = (P(cfg.query_axis, None) if cfg.query_axis
                 else P(None, None))
 
-    sharded = jax.shard_map(
-        local_counts, mesh=mesh, in_specs=in_specs, out_specs=out_spec,
-        check_vma=False)
+    sharded = _shard_map(local_counts, mesh, in_specs, out_spec)
 
     @jax.jit
     def pvalues(X, y, prelim, X_test):

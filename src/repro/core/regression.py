@@ -98,23 +98,18 @@ def pvalue_at(a_vec, b_vec, a, t_query):
     return (cnt + 1.0) / (n + 1.0)
 
 
-def prediction_interval(a_vec, b_vec, a, epsilon):
-    """Smallest interval containing {t : p(t) > eps} via critical-point sweep.
+def hull_sweep(lo, hi, empty, thresh):
+    """Convex hull of {t : #{i : t in [lo_i, hi_i]} > thresh} — the sweep.
 
-    Counts N(t) = #{i : t in S_i} change by +1 at lo_i and -1 past hi_i.
-    Since the test point's own score always >= itself, p(t) =
-    (N(t) + 1)/(n + 1) > eps <=> N(t) > eps (n+1) - 1. The set {p > eps} is
-    a finite union of intervals; full CP regression conventionally reports
-    its convex hull (Vovk et al. 2005). Runs in O(n log n).
+    Shared by ``prediction_interval`` (exact-shape) and the capacity-padded
+    streaming read path (``repro.regression.session``): padded rows enter as
+    ``empty`` and contribute neutral (+inf, delta 0) events, which sort after
+    every finite event and leave the finite prefix sums — and therefore the
+    hull — bit-identical to the unpadded sweep.
     """
-    n = a_vec.shape[0]
-    lo, hi = jax.vmap(_interval_ge, in_axes=(0, 0, None))(a_vec, b_vec, a)
-    thresh = epsilon * (n + 1.0) - 1.0
-
     # event sweep over sorted bounds: +1 at lo (inclusive), -1 after hi.
     # Empty intervals (lo > hi) are neutralized (delta 0) so they cannot
     # perturb counts at the infinity event cluster.
-    empty = lo > hi
     pts = jnp.concatenate([jnp.where(empty, INF, lo),
                            jnp.where(empty, INF, hi)])
     deltas = jnp.concatenate([jnp.where(empty, 0.0, 1.0),
@@ -132,6 +127,21 @@ def prediction_interval(a_vec, b_vec, a, epsilon):
     nxt = jnp.concatenate([pts_s[1:], jnp.array([INF])])
     hi_out = jnp.max(jnp.where(ok, nxt, -INF))
     return jnp.where(any_ok, lo_out, jnp.nan), jnp.where(any_ok, hi_out, jnp.nan)
+
+
+def prediction_interval(a_vec, b_vec, a, epsilon):
+    """Smallest interval containing {t : p(t) > eps} via critical-point sweep.
+
+    Counts N(t) = #{i : t in S_i} change by +1 at lo_i and -1 past hi_i.
+    Since the test point's own score always >= itself, p(t) =
+    (N(t) + 1)/(n + 1) > eps <=> N(t) > eps (n+1) - 1. The set {p > eps} is
+    a finite union of intervals; full CP regression conventionally reports
+    its convex hull (Vovk et al. 2005). Runs in O(n log n).
+    """
+    n = a_vec.shape[0]
+    lo, hi = jax.vmap(_interval_ge, in_axes=(0, 0, None))(a_vec, b_vec, a)
+    thresh = epsilon * (n + 1.0) - 1.0
+    return hull_sweep(lo, hi, lo > hi, thresh)
 
 
 # ---------------------------------------------------------------------------
@@ -152,8 +162,7 @@ def _knn_stats_augmented(X, y, x_t, k):
     Da = jnp.concatenate([D, d_t[:, None]], axis=1)  # (n, n+1); col n == test
     ya = jnp.concatenate([y, jnp.zeros((1,), dtype=y.dtype)])  # test label unused
 
-    neg, idx = jax.lax.top_k(-Da, k)  # k nearest per row
-    knn_d = -neg
+    _, idx = jax.lax.top_k(-Da, k)  # k nearest per row (distances unused)
     is_test = idx == n
     labels = ya[idx]  # (n, k); bogus where is_test
     test_in = jnp.any(is_test, axis=1)
@@ -161,7 +170,6 @@ def _knn_stats_augmented(X, y, x_t, k):
     sum_no_test = jnp.sum(jnp.where(is_test, 0.0, labels), axis=1)
     a_i = y - sum_no_test / k
     b_i = jnp.where(test_in, -1.0 / k, 0.0)
-    del knn_d
     return a_i, b_i
 
 
@@ -232,7 +240,10 @@ def fit(X, y, *, k) -> KnnRegState:
     D = _dists(X, X)
     D = jnp.where(jnp.eye(n, dtype=bool), BIG, D)
     neg, idx = jax.lax.top_k(-D, k)
-    knn_d = -neg  # ascending? top_k gives descending neg -> knn_d ascending
+    # top_k sorts -D descending, so -neg is ascending (nearest first) and
+    # ties break toward the lower index — asserted by
+    # tests/test_regression_stream.py::test_topk_negation_is_ascending
+    knn_d = -neg
     labels = y[idx]  # (n, k) neighbour labels, nearest first
     a_prime = y - jnp.sum(labels, axis=1) / k
     return KnnRegState(X, y, a_prime, knn_d[:, -1], labels[:, -1])
@@ -301,7 +312,7 @@ def icp_intervals(X, y, X_test, *, k, t, epsilon):
 
 
 __all__ = [
-    "pvalue_at", "prediction_interval",
+    "pvalue_at", "hull_sweep", "prediction_interval",
     "ab_standard", "pvalues_standard", "intervals_standard",
     "KnnRegState", "fit", "ab_optimized", "pvalues_optimized",
     "intervals_optimized", "icp_intervals",

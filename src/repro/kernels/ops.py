@@ -61,6 +61,32 @@ def cp_knn_counts(X, y, sum_same, kth_same, X_test, alpha, n_labels):
     return _ref.cp_knn_counts(X, y, sum_same, kth_same, X_test, alpha)
 
 
+def pallas_active(dtype=jnp.float32) -> bool:
+    """True when the f32 kernels dispatch to Pallas (TPU or interpret).
+
+    Callers that keep a bit-exact pure-jnp fallback (the streaming
+    regression read path) use this to pick the fused route only where it
+    actually runs as a kernel.
+    """
+    return dtype != jnp.float64 and (_on_tpu() or _interpret())
+
+
+def interval_sweep(X, a_prime, kth_dist, kth_label, live, X_test, a_test, k):
+    """Fused regression-CP critical points (lo, hi); Pallas on TPU."""
+    if X.dtype == jnp.float64:
+        return _ref.reg_interval_endpoints(
+            X, a_prime, kth_dist, kth_label, live, X_test, a_test, k)
+    if _on_tpu() or _interpret():
+        from repro.kernels.interval_sweep import interval_sweep as _pallas
+
+        return _pallas(
+            X, a_prime, kth_dist, kth_label, live, X_test, a_test, k=k,
+            interpret=not _on_tpu(),
+        )
+    return _ref.reg_interval_endpoints(
+        X, a_prime, kth_dist, kth_label, live, X_test, a_test, k)
+
+
 # past this many score elements per (batch, head), fall back to the chunked
 # online-softmax path off-TPU so 32k/500k sequences stay memory-bounded
 _DENSE_SCORE_LIMIT = 2048 * 2048

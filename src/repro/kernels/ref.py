@@ -56,6 +56,59 @@ def cp_knn_counts(
     return jnp.sum(alphas >= alpha[:, :, None], axis=-1).astype(jnp.int32)
 
 
+def reg_interval_endpoints(
+    X: jnp.ndarray, a_prime: jnp.ndarray, kth_dist: jnp.ndarray,
+    kth_label: jnp.ndarray, live: jnp.ndarray, X_test: jnp.ndarray,
+    a_test: jnp.ndarray, k: int, eps: float = 1e-12,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused regression-CP critical points (paper Section 8.1).
+
+    For each (test point t, training row i): the distance d(x_i, x_t), the
+    O(1) incremental&decremental update of the affine score coefficients
+        a_i = a'_i + [d < Delta_i^k] y_(k)(x_i)/k,   b_i in {0, -1/k},
+    and the boundary points of S_i = {t : |a_i + b_i t| >= |a_test + t|}
+    (the roots of (a_i + b_i t)^2 - (a_test + t)^2, at most two). Returns
+    (lo, hi), each (m, n); empty sets (and rows with ``live`` False) are
+    the neutral (+inf, -inf). Semantics of record for the Pallas kernel in
+    ``interval_sweep.py``; arithmetic mirrors ``regression._interval_ge``
+    exactly so the streaming read path stays bit-identical to the batch
+    optimized path.
+    """
+    INF = jnp.inf
+    d = jnp.sqrt(jnp.maximum(sq_dists(X_test, X), 0.0))  # (m, n)
+    upd = a_prime + kth_label / k
+    enters = live[None, :] & (d < kth_dist[None, :])
+    a_i = jnp.where(enters, upd[None, :], a_prime[None, :])
+    b_i = jnp.where(enters, -1.0 / k, 0.0)
+    a = a_test[:, None]  # (m, 1)
+
+    A2 = b_i * b_i - 1.0
+    B1 = a_i * b_i - a
+    C0 = a_i * a_i - a * a
+    disc = B1 * B1 - A2 * C0
+    sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+    denom = jnp.where(jnp.abs(A2) < eps, 1.0, A2)
+    r1 = (-B1 + sq) / denom
+    r2 = (-B1 - sq) / denom
+    qlo = jnp.minimum(r1, r2)
+    qhi = jnp.maximum(r1, r2)
+    quad_lo = jnp.where(disc >= 0.0, qlo, INF)
+    quad_hi = jnp.where(disc >= 0.0, qhi, -INF)
+    t0 = -C0 / jnp.where(jnp.abs(B1) < eps, 1.0, 2.0 * B1)
+    lin_lo = jnp.where(B1 > eps, t0,
+                       jnp.where(B1 < -eps, -INF,
+                                 jnp.where(C0 >= 0.0, -INF, INF)))
+    lin_hi = jnp.where(B1 > eps, INF,
+                       jnp.where(B1 < -eps, t0,
+                                 jnp.where(C0 >= 0.0, INF, -INF)))
+    is_quad = jnp.abs(A2) >= eps
+    lo = jnp.where(is_quad, quad_lo, lin_lo)
+    hi = jnp.where(is_quad, quad_hi, lin_hi)
+    lo = jnp.where(live[None, :], lo, INF)
+    hi = jnp.where(live[None, :], hi, -INF)
+    return lo, hi
+
+
 def flash_attention(
     q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     causal: bool = True, window: int | None = None, scale: float | None = None,

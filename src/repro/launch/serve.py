@@ -12,6 +12,18 @@ state is snapshotted/restored through the crash-safe checkpoint store::
 
     python -m repro.launch.serve --sessions 32 --steps 200 --window 64
 
+Adding ``--regression`` switches those sessions to streaming full-CP
+*regression* (paper Section 8.1 served online, ``repro.regression``):
+each tick prices the observed label (martingale drift detection), and
+the read path returns exact prediction intervals for every tenant in
+one dispatch::
+
+    python -m repro.launch.serve --sessions 32 --regression --steps 200 \\
+        --window 128 --capacity 128 --dim 2 --drift 3.0
+
+(k-NN regression needs a dense neighbourhood to price drift: prefer low
+--dim / window >= 100 for the drift demo.)
+
 Pipeline per batch of requests:
     1. prefill the prompt, build per-layer KV/recurrent caches,
     2. greedy decode ``gen_tokens`` steps with the serve_step,
@@ -99,6 +111,88 @@ def _serve_sessions(args) -> int:
     return 0
 
 
+def _serve_regression(args) -> int:
+    """Multi-tenant streaming regression CP on the regression engine."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.online import simple_mixture_log_martingale
+    from repro.regression import RegressionServingEngine
+    from repro.serving import SessionStore
+
+    S, T, dim = args.sessions, args.steps, args.dim
+    if T < 2:
+        raise SystemExit(
+            "--steps must be >= 2 (tick 0 is the compile warmup)")
+    eng = RegressionServingEngine(
+        n_sessions=S, capacity=args.capacity, dim=dim, k=args.k,
+        window=args.window)
+    state = eng.init_state()
+    print(f"[serve] regression engine: {S} sessions x cap {args.capacity} "
+          f"(window={args.window}, k={args.k})")
+
+    # per-tenant linear traffic y = <w_s, x> + noise; odd tenants change
+    # their regression function at T/2 (streaming drift detection)
+    key = jax.random.PRNGKey(args.seed)
+    kw, kx, kn, kt = jax.random.split(key, 4)
+    W = jax.random.normal(kw, (S, dim), jnp.float32)
+    X = jax.random.normal(kx, (S, T, dim), jnp.float32)
+    noise = 0.1 * jax.random.normal(kn, (S, T), jnp.float32)
+    y = jnp.einsum("sd,std->st", W, X) + noise
+    drifted = jnp.arange(S) % 2 == 1
+    late = jnp.arange(T)[None, :] >= T // 2
+    y = jnp.where(drifted[:, None] & late, y + args.drift, y)
+    taus = jax.random.uniform(kt, (S, T), dtype=jnp.float32)
+
+    pvals = np.zeros((S, T), np.float32)
+    state, _ = eng.observe(  # warmup tick 0 outside the clock (compile)
+        state, X[:, 0], y[:, 0], taus[:, 0])
+    pvals[:, 0] = np.nan
+    t0 = time.time()
+    for t in range(1, T):
+        state, p = eng.observe(state, X[:, t], y[:, t], taus[:, t])
+        pvals[:, t] = np.asarray(p)
+    dt = time.time() - t0
+    print(f"[serve] {S} sessions x {T - 1} steps in {dt:.2f}s "
+          f"({S * (T - 1) / dt:.0f} session-steps/s)")
+
+    warm = 2 * args.k  # k-NN warmup: earliest p-values are degenerate
+    logm = np.asarray(jax.vmap(simple_mixture_log_martingale)(
+        jnp.asarray(pvals[:, warm:]))[:, -1])
+    for s in range(min(S, 8)):
+        flag = "DRIFT" if logm[s] > args.log_threshold else "ok   "
+        print(f"  tenant {s:3d} [{flag}] log M_T={logm[s]:8.2f} "
+              f"(drift injected: {bool(drifted[s])})")
+    det = logm > args.log_threshold
+    print(f"[serve] drift flagged: {int(det.sum())}/{S} "
+          f"(injected: {int(np.asarray(drifted).sum())})")
+
+    # exact prediction intervals for a fresh query batch, every tenant
+    # in one dispatch
+    Xq = jax.random.normal(jax.random.PRNGKey(args.seed + 1),
+                           (4, dim), jnp.float32)
+    iv = np.asarray(eng.intervals(state, Xq, epsilon=args.eps))
+    widths = iv[:, :, 1] - iv[:, :, 0]
+    print(f"[serve] intervals (eps={args.eps}): finite "
+          f"{np.isfinite(iv).mean():.2f}, median width "
+          f"{np.nanmedian(widths):.2f}")
+
+    if args.snapshot_dir:
+        store = SessionStore(args.snapshot_dir)
+        store.save(T, state, meta=eng.meta(), blocking=True)
+        eng2, state2, step = SessionStore(args.snapshot_dir).restore_engine()
+        same = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree_util.tree_leaves(state),
+                            jax.tree_util.tree_leaves(state2)))
+        print(f"[serve] snapshot@step {step} -> restore "
+              f"{'bit-exact' if same else 'MISMATCH'}")
+        if not same:
+            return 1
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
@@ -120,10 +214,17 @@ def main(argv=None) -> int:
     ap.add_argument("--drift", type=float, default=2.0)
     ap.add_argument("--log-threshold", type=float, default=2.0)
     ap.add_argument("--snapshot-dir", default="")
+    ap.add_argument("--regression", action="store_true",
+                    help="with --sessions: serve streaming regression CP "
+                         "(prediction intervals) instead of classification")
     args = ap.parse_args(argv)
 
     if args.sessions > 0:
+        if args.regression:
+            return _serve_regression(args)
         return _serve_sessions(args)
+    if args.regression:
+        raise SystemExit("--regression requires --sessions N")
 
     import jax
     import jax.numpy as jnp

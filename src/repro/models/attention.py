@@ -34,6 +34,28 @@ NEG_INF = -1e30
 _HEADS_TP = (BATCH_AXES, None, "model", None)
 
 
+@jax.custom_vjp
+def _barrier(x):
+    """Differentiable ``optimization_barrier``.
+
+    jax 0.4.x ships no differentiation rule for the primitive; the intent
+    (stop fusion across the gather boundary) applies to the backward
+    reduce-scatter just the same, so the VJP barriers the cotangent.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _barrier_fwd(x):
+    return _barrier(x), None
+
+
+def _barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_barrier.defvjp(_barrier_fwd, _barrier_bwd)
+
+
 # ---------------------------------------------------------------------------
 # params
 # ---------------------------------------------------------------------------
@@ -112,7 +134,7 @@ def _project_qkv(p, x, cfg: ArchConfig, positions, theta):
     # optimization barrier stops the norm's f32 internals from fusing
     # across the boundary — the gather must move bf16, not f32
     # (EXPERIMENTS.md §Perf granite iteration 3).
-    x = jax.lax.optimization_barrier(constrain(x, (BATCH_AXES, None, None)))
+    x = _barrier(constrain(x, (BATCH_AXES, None, None)))
     q = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), _HEADS_TP)
     k = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wk"]), _HEADS_TP)
     v = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wv"]), _HEADS_TP)

@@ -1,0 +1,198 @@
+"""Per-tenant streaming regression-CP session over ``RegStreamState``.
+
+Adds to the raw stream state the three per-tenant behaviours the serving
+engine needs, all fixed-shape and vmappable:
+
+* ``observe`` — price the incoming example first (smoothed online
+  p-value of its *actual* label against the current window — the
+  regression analogue of ``core.online.observe``, feeding the same
+  exchangeability martingales), then learn it;
+* ``observe_sliding`` — evict-if-full then observe: one sliding-window
+  step with a traced per-tenant ``window``;
+* ``intervals`` / ``pvalues`` — capacity-padded read paths. ``intervals``
+  routes the fused distance-row + (a_i, b_i) update + critical-point
+  computation through ``kernels.ops.interval_sweep`` (the Pallas kernel
+  on TPU) and finishes with the shared ``regression.hull_sweep``; padded
+  rows contribute neutral events, so results are bit-identical to
+  ``regression.intervals_optimized`` on the live window (property-tested;
+  the one caveat is an ``epsilon`` sitting exactly on the p == epsilon
+  rank boundary, where f32 vs f64 threshold rounding may legitimately
+  differ — the same measure-zero tie the batch tests dodge with
+  irrational grid offsets).
+
+Read paths require n >= k (the candidate's own k-NN needs k live rows);
+early-stream outputs are well-shaped but degenerate, as in the batch path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.regression import BIG, _interval_ge, hull_sweep
+from repro.kernels import ops as kops
+from repro.regression import stream
+from repro.regression.stream import RegStreamState
+
+init = stream.init
+
+
+def _ab_padded(state: RegStreamState, X_test, *, k):
+    """Padded ``ab_optimized`` for a (m, p) query batch.
+
+    Returns (a_vec (m, cap), b_vec (m, cap), a (m,), live (cap,)) with
+    bits equal to ``regression.ab_optimized`` per live row/test point.
+    """
+    cap = state.capacity
+    live = jnp.arange(cap) < state.n
+    kth = state.nbr_d[:, -1]
+    a_prime = state.y - jnp.sum(state.nbr_y, axis=1) / k
+    upd = a_prime + state.nbr_y[:, -1] / k
+
+    d = jnp.sqrt(jnp.maximum(kops.sq_dists(X_test, state.X), 0.0))
+    enters = live[None, :] & (d < kth[None, :])
+    a_vec = jnp.where(enters, upd[None, :], a_prime[None, :])
+    b_vec = jnp.where(enters, -1.0 / k, 0.0)
+
+    dm = jnp.where(live[None, :], d, BIG)
+    _, idx = jax.lax.top_k(-dm, k)
+    a = -jnp.sum(state.y[idx], axis=1) / k
+    return a_vec, b_vec, a, live
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def observe(state: RegStreamState, x_new, y_new, tau, *, k):
+    """Smoothed online p-value of (x_new, y_new), then learn it.
+
+    The p-value tests the *observed label* against the current window
+    (conformal test statistic for drift martingales): alpha_i = |a_i +
+    b_i y|, alpha = |a + y|, smoothed rank with tie-break ``tau``. The
+    distance row the learn step computes anyway (``stream.observe``'s
+    second return) prices the point — scoring uses the pre-learn
+    statistics, so one O(cap) row serves both.
+    Precondition: n < capacity.
+    """
+    cap = state.capacity
+    new_state, d_row = stream.observe(state, x_new, y_new, k=k)
+
+    live = jnp.arange(cap) < state.n
+    kth = state.nbr_d[:, -1]
+    a_prime = state.y - jnp.sum(state.nbr_y, axis=1) / k
+    enters = live & (d_row < kth)  # d_row is BIG on inert rows
+    a_vec = jnp.where(enters, a_prime + state.nbr_y[:, -1] / k, a_prime)
+    b_vec = jnp.where(enters, -1.0 / k, 0.0)
+    _, idx = jax.lax.top_k(-d_row, k)
+    a = -jnp.sum(state.y[idx]) / k
+
+    t = jnp.asarray(y_new, state.y.dtype)
+    alphas = jnp.abs(a_vec + b_vec * t)
+    alpha = jnp.abs(a + t)
+    gt = jnp.sum(jnp.where(live, alphas > alpha, False))
+    eq = jnp.sum(jnp.where(live, alphas == alpha, False))
+    p = (gt + tau * (eq + 1.0)) / (state.n + 1.0)
+    return new_state, p
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def observe_sliding(state: RegStreamState, x_new, y_new, tau, window, *, k):
+    """Evict-if-full then observe: one fixed-shape sliding-window step.
+
+    ``window`` is a traced scalar (per-tenant window sizes never
+    retrace). Under vmap the cond lowers to a select — both branches
+    run, lanes that don't evict keep their state bitwise unchanged.
+    """
+    state = jax.lax.cond(
+        state.n >= window,
+        lambda s: stream.evict_oldest(s, k=k),
+        lambda s: s,
+        state,
+    )
+    return observe(state, x_new, y_new, tau, k=k)
+
+
+def grow(state: RegStreamState, factor: int = 2) -> RegStreamState:
+    """Double (by default) capacity host-side, preserving all live state.
+
+    Shapes change, so jitted steps retrace — but only O(log n) times over
+    a session's lifetime (the capacity-doubling schedule). Not jittable.
+    """
+    cap = state.capacity
+    extra = cap * (factor - 1)
+    return RegStreamState(
+        X=jnp.pad(state.X, ((0, extra), (0, 0))),
+        y=jnp.pad(state.y, (0, extra)),
+        D=jnp.pad(state.D, ((0, extra), (0, extra)), constant_values=BIG),
+        nbr_d=jnp.pad(state.nbr_d, ((0, extra), (0, 0)),
+                      constant_values=BIG),
+        nbr_y=jnp.pad(state.nbr_y, ((0, extra), (0, 0))),
+        n=state.n,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def intervals(state: RegStreamState, X_test, *, k, epsilon):
+    """Prediction intervals (m, 2) at miscoverage ``epsilon``.
+
+    ``epsilon`` is traced (one compile serves every level — it only feeds
+    the sweep threshold, and a traced f32 rounds identically to the
+    embedded constant). Where the Pallas kernels are live (TPU, or
+    interpret mode), the
+    distance row + (a_i, b_i) update + critical points come fused from
+    ``kops.interval_sweep``. Elsewhere the computation structurally
+    mirrors ``regression.intervals_optimized`` (per-test ``lax.map``,
+    vmapped ``_interval_ge``), so XLA emits the very same fused
+    arithmetic and the results are bit-identical to the batch optimized
+    path on the live window — the fully-batched form differs by ~1 ulp
+    in the endpoints through different FMA contraction.
+    """
+    cap = state.capacity
+    live = jnp.arange(cap) < state.n
+    kth = state.nbr_d[:, -1]
+    a_prime = state.y - jnp.sum(state.nbr_y, axis=1) / k
+    kth_label = state.nbr_y[:, -1]
+    thresh = epsilon * (state.n + 1.0) - 1.0
+
+    if kops.pallas_active(state.X.dtype):
+        d = jnp.sqrt(jnp.maximum(kops.sq_dists(X_test, state.X), 0.0))
+        dm = jnp.where(live[None, :], d, BIG)
+        _, idx = jax.lax.top_k(-dm, k)
+        a_test = -jnp.sum(state.y[idx], axis=1) / k
+        lo, hi = kops.interval_sweep(
+            state.X, a_prime, kth, kth_label, live, X_test, a_test, k)
+
+        def sweep(lo_r, hi_r):
+            return jnp.stack(hull_sweep(lo_r, hi_r, lo_r > hi_r, thresh))
+
+        return jax.vmap(sweep)(lo, hi)
+
+    def per_test(x_t):
+        d_t = jnp.sqrt(jnp.maximum(
+            kops.sq_dists(x_t[None], state.X)[0], 0.0))
+        enters = live & (d_t < kth)
+        a_vec = jnp.where(enters, a_prime + kth_label / k, a_prime)
+        b_vec = jnp.where(enters, -1.0 / k, 0.0)
+        dm = jnp.where(live, d_t, BIG)
+        _, idx = jax.lax.top_k(-dm, k)
+        a = -jnp.sum(state.y[idx]) / k
+        lo, hi = jax.vmap(_interval_ge, in_axes=(0, 0, None))(
+            a_vec, b_vec, a)
+        return jnp.stack(hull_sweep(lo, hi, (lo > hi) | ~live, thresh))
+
+    return jax.lax.map(per_test, X_test)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def pvalues(state: RegStreamState, X_test, t_query, *, k):
+    """Exact p-values (m, nq) at explicit query labels ``t_query``."""
+    a_vec, b_vec, a, live = _ab_padded(state, X_test, k=k)
+    ai = jnp.abs(a_vec[:, None, :] + b_vec[:, None, :]
+                 * t_query[None, :, None])  # (m, nq, cap)
+    at = jnp.abs(a[:, None] + t_query[None, :])  # (m, nq)
+    cnt = jnp.sum(jnp.where(live[None, None, :], ai >= at[..., None], False),
+                  axis=-1)
+    return (cnt + 1.0) / (state.n + 1.0)
+
+
+__all__ = ["RegStreamState", "init", "observe", "observe_sliding", "grow",
+           "intervals", "pvalues"]

@@ -1,0 +1,254 @@
+"""Exact incremental/decremental k-NN regression state (paper Section 8.1).
+
+``core.regression.fit`` precomputes, per training point, the k nearest
+neighbour labels (ordered nearest-first), the k-th neighbour distance and
+label — the statistics behind the O(1)-per-point ``ab_optimized`` update.
+This module maintains those statistics *online*: ``observe`` learns one
+point and ``evict`` forgets one, both keeping every derived quantity
+**bit-identical** to ``regression.fit`` refit-from-scratch on the live
+window (property-tested in ``tests/test_regression_stream.py``).
+
+The trick is the same as ``serving/session.py`` for classification: keep
+the live pairwise-distance matrix ``D`` (one row+column per ``observe`` —
+the row is needed for the online p-value anyway), so decremental removal
+backfills k-best lists from stored exact distances instead of re-deriving
+them. Bit-exactness additionally needs three invariants special to the
+regression measure, where neighbour *labels* (not just distances) enter
+the scores:
+
+* ``nbr_d``/``nbr_y`` store each point's k nearest distances and labels in
+  ``fit``'s exact order (ascending distance, ties toward the lower index:
+  a new arrival carries the largest index, so it is inserted strictly
+  below equal distances — a stable argsort with the candidate appended
+  last reproduces ``top_k``'s tie rule);
+* the label attached to a BIG (missing-neighbour) slot of row i is
+  ``y_i`` — exactly what ``fit`` produces at window size n == k, where the
+  only BIG entry in a row is its own masked diagonal;
+* distance rows/columns are computed with the very ``kops.sq_dists``
+  expression ``fit`` uses, which is bitwise row-decomposable and padding-
+  invariant on the supported backends (checked by the property tests).
+
+All arrays are capacity-padded and fixed-shape, so every update is one
+jit-stable dispatch and vmaps across tenants (``repro.regression.engine``).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.regression import BIG, KnnRegState
+from repro.kernels import ops as kops
+
+
+def _dist_row(x, X):
+    """Euclidean distances from ``x`` to every row of ``X``.
+
+    Must stay the exact expression ``regression._dists`` lowers to for one
+    row — streaming bit-exactness vs ``fit`` rests on it.
+    """
+    return jnp.sqrt(jnp.maximum(kops.sq_dists(x[None], X)[0], 0.0))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class RegStreamState:
+    """Capacity-padded streaming k-NN regression state.
+
+    Rows ``[0, n)`` are live in arrival order. Inert rows hold zeros in
+    ``X``/``y`` (zero rows keep ``sq_dists`` padding-invariant) and BIG in
+    ``D``/``nbr_d``; ``D`` is BIG on the diagonal, mirroring ``fit``'s
+    self-exclusion mask.
+    """
+
+    X: jnp.ndarray  # (cap, p)
+    y: jnp.ndarray  # (cap,)
+    D: jnp.ndarray  # (cap, cap) live pairwise distances, BIG elsewhere
+    nbr_d: jnp.ndarray  # (cap, k) k nearest distances, ascending
+    nbr_y: jnp.ndarray  # (cap, k) their labels, same order
+    n: jnp.ndarray  # () live count
+
+    def tree_flatten(self):
+        return ((self.X, self.y, self.D, self.nbr_d, self.nbr_y,
+                 self.n), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.D.shape[-1]
+
+    @property
+    def k(self) -> int:
+        return self.nbr_d.shape[-1]
+
+
+def init(capacity: int, p: int, k: int, dtype=jnp.float32) -> RegStreamState:
+    if capacity < k:
+        raise ValueError(
+            f"capacity {capacity} < k {k}: the k-best machinery (top_k) "
+            "needs at least k rows")
+    return RegStreamState(
+        X=jnp.zeros((capacity, p), dtype=dtype),
+        y=jnp.zeros((capacity,), dtype=dtype),
+        D=jnp.full((capacity, capacity), BIG, dtype=dtype),
+        nbr_d=jnp.full((capacity, k), BIG, dtype=dtype),
+        nbr_y=jnp.zeros((capacity, k), dtype=dtype),
+        n=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def state_view(state: RegStreamState, *, k) -> KnnRegState:
+    """The capacity-padded ``KnnRegState`` this stream state encodes.
+
+    Live rows carry exactly ``regression.fit``'s bits (once n >= k);
+    inert rows are garbage and must be masked by the reader. Jitted on
+    purpose: ``fit`` computes ``a_prime`` inside jit, and XLA's fused
+    sum/divide/subtract rounds differently from the eager op-by-op
+    dispatch — bit-parity needs the same compilation path.
+    """
+    a_prime = state.y - jnp.sum(state.nbr_y, axis=1) / k
+    return KnnRegState(state.X, state.y, a_prime,
+                       state.nbr_d[:, -1], state.nbr_y[:, -1])
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def observe(state: RegStreamState, x_new, y_new, *, k):
+    """Learn one example in O(cap k): the paper's incremental update.
+
+    Returns ``(new_state, d_row)`` — ``d_row`` is the (cap,) vector of
+    distances from ``x_new`` to each live row (BIG on inert rows), for
+    callers that price the point before learning it (``session.observe``).
+    Precondition: n < capacity (callers grow or evict first).
+    """
+    cap = state.capacity
+    idx = state.n
+    live = jnp.arange(cap) < state.n
+    y_new = jnp.asarray(y_new, state.y.dtype)
+
+    d = _dist_row(x_new, state.X)
+    d_row = jnp.where(live, d, BIG)  # BIG at self (idx >= n) and inert
+    D = state.D.at[idx, :].set(d_row).at[:, idx].set(d_row)
+
+    # existing rows: the new point enters row i's k-NN list iff d < kth
+    # (strict: ties keep the incumbent, whose index is lower — top_k's rule)
+    enters = live & (d < state.nbr_d[:, -1])
+    cand_d = jnp.where(enters, d, BIG)
+    merged_d = jnp.concatenate([state.nbr_d, cand_d[:, None]], axis=1)
+    merged_y = jnp.concatenate(
+        [state.nbr_y, jnp.full((cap, 1), y_new, state.nbr_y.dtype)], axis=1)
+    # stable sort with the candidate appended last == insert after equal
+    # distances (the candidate's index is the largest) — fit's tie order
+    order = jnp.argsort(merged_d, axis=1, stable=True)
+    nbr_d = jnp.take_along_axis(merged_d, order, axis=1)[:, :k]
+    nbr_y = jnp.take_along_axis(merged_y, order, axis=1)[:, :k]
+
+    # the new row's own list: top_k over its distance row (BIG at self),
+    # exactly fit's per-row computation
+    y2 = state.y.at[idx].set(y_new)
+    own_neg, own_idx = jax.lax.top_k(-d_row, k)
+    own_d = -own_neg
+    own_y = y2[own_idx]
+    # missing-neighbour slots carry the row's own label (fit convention:
+    # at n == k the one BIG entry is the masked self-diagonal)
+    own_y = jnp.where(own_d >= BIG, y_new, own_y)
+    nbr_y = jnp.where(nbr_d >= BIG, state.y[:, None], nbr_y)
+
+    new_state = RegStreamState(
+        X=state.X.at[idx].set(x_new),
+        y=y2,
+        D=D,
+        nbr_d=nbr_d.at[idx].set(own_d),
+        nbr_y=nbr_y.at[idx].set(own_y),
+        n=state.n + 1,
+    )
+    return new_state, d_row
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def evict(state: RegStreamState, i, *, k) -> RegStreamState:
+    """Forget live row ``i`` in O(cap^2) worst case: decremental update.
+
+    Only rows whose k-NN list contained the evicted point are touched;
+    each is recomputed from the stored exact distances, so the result is
+    bit-exact vs refitting on the remaining window. Rows above ``i`` are
+    compacted down by one (arrival order preserved, so top_k's
+    lower-index-first tie rule keeps matching ``fit`` on the window).
+    ``i`` may be traced. Precondition: 0 <= i < n (callers guard; under
+    vmap+select the skipped lanes compute discarded garbage).
+    """
+    cap = state.capacity
+    i = jnp.asarray(i, jnp.int32)
+    live = jnp.arange(cap) < state.n
+
+    # rows whose list held the evicted point: d(r, i) <= kth. The evicted
+    # index may sit anywhere, so on ties we cannot tell membership from
+    # the distance alone — recompute conservatively (recompute is exact).
+    dcol = state.D[:, i]
+    affected = live & (dcol <= state.nbr_d[:, -1])
+
+    # compact rows > i down by one (gather; index cap-1 maps to itself and
+    # is overwritten by the inert fill below)
+    perm = jnp.arange(cap) + (jnp.arange(cap) >= i)
+    perm = jnp.minimum(perm, cap - 1)
+    n2 = state.n - 1
+    live2 = jnp.arange(cap) < n2
+
+    Xs = jnp.where(live2[:, None], state.X[perm], 0.0)
+    ys = jnp.where(live2, state.y[perm], 0.0)
+    Ds = state.D[perm][:, perm]
+    Ds = jnp.where(live2[:, None] & live2[None, :], Ds, BIG)
+    nbr_ds = jnp.where(live2[:, None], state.nbr_d[perm], BIG)
+    nbr_ys = jnp.where(live2[:, None], state.nbr_y[perm], 0.0)
+    aff = live2 & affected[perm]
+
+    # backfill affected rows: exact k-best straight from the stored
+    # distances (the diagonal and inert entries are already BIG)
+    neg, idxm = jax.lax.top_k(-Ds, k)
+    rec_d = -neg
+    rec_y = ys[idxm]
+    rec_y = jnp.where(rec_d >= BIG, ys[:, None], rec_y)
+    return RegStreamState(
+        X=Xs, y=ys, D=Ds,
+        nbr_d=jnp.where(aff[:, None], rec_d, nbr_ds),
+        nbr_y=jnp.where(aff[:, None], rec_y, nbr_ys),
+        n=n2,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def evict_oldest(state: RegStreamState, *, k) -> RegStreamState:
+    """Sliding-window form: forget the oldest live point (row 0)."""
+    return evict(state, 0, k=k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "capacity"))
+def _replay(X, y, *, k, capacity):
+    state = init(capacity, X.shape[1], k, dtype=X.dtype)
+
+    def step(s, xy):
+        s2, _ = observe(s, xy[0], xy[1], k=k)
+        return s2, None
+
+    state, _ = jax.lax.scan(step, state, (X, y))
+    return state
+
+
+def from_fit(X, y, *, k, capacity: int) -> RegStreamState:
+    """Seed a streaming state from batch data by replaying ``observe``.
+
+    One scanned jit (buffers donated across steps, no per-step host
+    round-trip) — the incremental construction *is* the fit, bit-exactly,
+    so no separate batch loader is needed.
+    """
+    return _replay(jnp.asarray(X), jnp.asarray(y), k=k,
+                   capacity=int(capacity))
+
+
+__all__ = ["RegStreamState", "init", "state_view", "observe", "evict",
+           "evict_oldest", "from_fit"]

@@ -1,11 +1,12 @@
 """Declarative nonconformity-measure registry for online CP serving.
 
 Unifies the paper's incrementally-and-decrementally optimized measures —
-k-NN / simplified k-NN (Section 3), KDE (Section 4), LS-SVM (Section 5)
-— behind one ``fit / observe / evict / pvalues`` surface (the
-Predictor–Calibrator shape of wrapper libraries like puncc), so a new
-measure plugs into the serving stack by registering four functions
-instead of editing engine code::
+k-NN / simplified k-NN (Section 3), KDE (Section 4), LS-SVM (Section 5),
+streaming k-NN regression (Section 8.1) — behind one ``fit / observe /
+evict / pvalues`` surface (the Predictor–Calibrator shape of wrapper
+libraries like puncc), so a new measure plugs into the serving stack by
+registering four functions instead of editing engine code (regression
+measures add an optional ``intervals`` hook)::
 
     from repro.serving import registry
 
@@ -56,6 +57,8 @@ class MeasureSpec:
     evict: Callable[..., Any] | None  # (state, ctx, i, hp) -> state
     pvalues: Callable[..., jnp.ndarray]  # (state, ctx, X_test, hp) -> (m, l)
     defaults: dict
+    # regression measures: (state, ctx, X_test, epsilon, hp) -> (m, 2)
+    intervals: Callable[..., jnp.ndarray] | None = None
 
 
 _REGISTRY: dict[str, MeasureSpec] = {}
@@ -156,10 +159,75 @@ def _lssvm_spec() -> MeasureSpec:
                                  "rff_dim": 128, "seed": 0, "n_labels": 2})
 
 
+def _knn_regression_spec() -> MeasureSpec:
+    """Streaming k-NN regression CP (paper Section 8.1).
+
+    The state is an exact-shape ``regression.RegStreamState`` (capacity ==
+    n; one retrace per size, like every registry measure). ``pvalues``
+    evaluates p(t) at the ``t_query`` label grid; the ``intervals`` hook
+    is the natural read path.
+    """
+    from repro.regression import session as rsession
+    from repro.regression import stream as rstream
+
+    def _pad_one(state):
+        return rstream.RegStreamState(
+            X=jnp.pad(state.X, ((0, 1), (0, 0))),
+            y=jnp.pad(state.y, (0, 1)),
+            D=jnp.pad(state.D, ((0, 1), (0, 1)), constant_values=1e30),
+            nbr_d=jnp.pad(state.nbr_d, ((0, 1), (0, 0)),
+                          constant_values=1e30),
+            nbr_y=jnp.pad(state.nbr_y, ((0, 1), (0, 0))),
+            n=state.n,
+        )
+
+    def _shrink_one(state):
+        return rstream.RegStreamState(
+            X=state.X[:-1], y=state.y[:-1], D=state.D[:-1, :-1],
+            nbr_d=state.nbr_d[:-1], nbr_y=state.nbr_y[:-1], n=state.n)
+
+    def fit(X, y, hp):
+        X = jnp.asarray(X, jnp.float32)
+        y = jnp.asarray(y, jnp.float32)
+        return rstream.from_fit(X, y, k=hp["k"], capacity=X.shape[0]), None
+
+    def observe(state, ctx, x, y, hp):
+        st, _ = rstream.observe(
+            _pad_one(state), jnp.asarray(x, jnp.float32),
+            jnp.asarray(y, jnp.float32), k=hp["k"])
+        return st
+
+    def evict(state, ctx, i, hp):
+        n = int(state.n)
+        i = int(i)
+        if not -n <= i < n:
+            raise IndexError(
+                f"index {i} out of range for {n} training points")
+        return _shrink_one(rstream.evict(state, i % n, k=hp["k"]))
+
+    def pvalues(state, ctx, X_test, hp):
+        if hp["t_query"] is None:
+            raise ValueError(
+                "knn_regression p-values need a label grid: pass "
+                "t_query=<array> (or use .intervals(X_test, eps))")
+        return rsession.pvalues(
+            state, X_test, jnp.asarray(hp["t_query"], jnp.float32),
+            k=hp["k"])
+
+    def intervals(state, ctx, X_test, epsilon, hp):
+        return rsession.intervals(
+            state, X_test, k=hp["k"], epsilon=float(epsilon))
+
+    return MeasureSpec("knn_regression", fit, observe, evict, pvalues,
+                       defaults={"k": 7, "t_query": None},
+                       intervals=intervals)
+
+
 register(_knn_spec("knn", simplified=False))
 register(_knn_spec("simplified_knn", simplified=True))
 register(_kde_spec())
 register(_lssvm_spec())
+register(_knn_regression_spec())
 
 
 # ---------------------------------------------------------------------------
@@ -206,6 +274,15 @@ class ConformalPredictor:
 
     def predict_set(self, X_test, eps: float) -> jnp.ndarray:
         return pv.prediction_sets(self.pvalues(X_test), eps)
+
+    def intervals(self, X_test, eps: float) -> jnp.ndarray:
+        """Prediction intervals (m, 2) — regression measures only."""
+        if self.spec.intervals is None:
+            raise NotImplementedError(
+                f"measure {self.spec.name!r} has no interval read path "
+                "(classification measures predict sets; see predict_set)")
+        return self.spec.intervals(
+            self._state, self._ctx, jnp.asarray(X_test), eps, self.hp)
 
     @property
     def n(self) -> int:

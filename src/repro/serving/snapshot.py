@@ -24,20 +24,31 @@ import jax.numpy as jnp
 
 from repro.checkpoint.store import CheckpointStore
 from repro.core.online import OnlineKnnState
+from repro.regression.engine import RegressionServingEngine
+from repro.regression.stream import RegStreamState
 from repro.serving.engine import ServingEngine
 from repro.serving.session import Session
 
 
-def _like_from_manifest(manifest: dict) -> Session:
-    """Zero-filled Session (possibly batched) matching the saved leaves."""
+def _like_from_manifest(manifest: dict):
+    """Zero-filled session pytree (possibly batched) matching the leaves.
+
+    5 leaves = classification ``Session`` (X, y, best, n, D); 6 leaves =
+    regression ``RegStreamState`` (X, y, D, nbr_d, nbr_y, n).
+    """
     specs = manifest["leaves"]
-    if len(specs) != 5:
-        raise ValueError(
-            f"snapshot has {len(specs)} leaves; a Session has 5 "
-            "(X, y, best, n, D) — not a serving snapshot?")
-    X, y, best, n, D = (
-        jnp.zeros(tuple(s["shape"]), dtype=s["dtype"]) for s in specs)
-    return Session(OnlineKnnState(X, y, best, n), D)
+    if len(specs) == 5:
+        X, y, best, n, D = (
+            jnp.zeros(tuple(s["shape"]), dtype=s["dtype"]) for s in specs)
+        return Session(OnlineKnnState(X, y, best, n), D)
+    if len(specs) == 6:
+        X, y, D, nbr_d, nbr_y, n = (
+            jnp.zeros(tuple(s["shape"]), dtype=s["dtype"]) for s in specs)
+        return RegStreamState(X, y, D, nbr_d, nbr_y, n)
+    raise ValueError(
+        f"snapshot has {len(specs)} leaves; expected 5 (classification "
+        "Session) or 6 (regression RegStreamState) — not a serving "
+        "snapshot?")
 
 
 class SessionStore:
@@ -70,12 +81,14 @@ class SessionStore:
         state, step = self._store.restore(like, step)
         return state, step, manifest.get("extra", {})
 
-    def restore_engine(self, step: int | None = None
-                       ) -> tuple[ServingEngine, Session, int]:
+    def restore_engine(self, step: int | None = None):
         """Rebuild the engine *and* its state from the latest snapshot.
 
-        Geometry (n_sessions, capacity, dim) is taken from the saved
-        arrays; k / n_labels / window / dtype from the saved meta.
+        Returns ``(engine, state, step)`` — a ``ServingEngine`` for
+        classification snapshots, a ``RegressionServingEngine`` when the
+        saved meta says ``mode == "regression"``. Geometry (n_sessions,
+        capacity, dim) is taken from the saved arrays; k / n_labels /
+        window / dtype from the saved meta.
         """
         state, step, meta = self.restore(step)
         if "k" not in meta:
@@ -83,12 +96,21 @@ class SessionStore:
                 f"snapshot step {step} carries no engine meta (saved "
                 "without meta=engine.meta()?) — use restore() and "
                 "construct the ServingEngine yourself")
+        regression = isinstance(state, RegStreamState)
+        if regression != (meta.get("mode") == "regression"):
+            raise ValueError(
+                f"snapshot step {step}: state/meta mode mismatch "
+                f"({type(state).__name__} vs meta mode "
+                f"{meta.get('mode')!r})")
+        X = state.X if regression else state.knn.X
         meta = {
             **meta,
             "n_sessions": int(state.D.shape[0]),
             "capacity": int(state.D.shape[-1]),
-            "dim": int(state.knn.X.shape[-1]),
+            "dim": int(X.shape[-1]),
         }
+        if regression:
+            return RegressionServingEngine.from_meta(meta), state, step
         return ServingEngine.from_meta(meta), state, step
 
 

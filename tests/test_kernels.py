@@ -8,6 +8,7 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.cp_update import cp_knn_counts as cp_pallas
+from repro.kernels.interval_sweep import interval_sweep as iv_pallas
 from repro.kernels.kde_score import kde_rowsums as kde_pallas
 from repro.kernels.pairwise_dist import pairwise_sq_dists
 from repro.kernels.flash_attention import flash_attention as fa_pallas
@@ -58,6 +59,36 @@ def test_cp_knn_counts_sweep(n, m, l):
                     interpret=True)
     want = ref.cp_knn_counts(X, y, sum_same, kth, Xt, alpha)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,m,k", [(64, 4, 5), (130, 7, 1), (200, 33, 7)])
+@pytest.mark.parametrize("dead_tail", [0, 17])
+def test_interval_sweep_matches_ref(n, m, k, dead_tail):
+    """Fused distance + (a_i, b_i) update + critical points vs oracle.
+
+    Finite endpoints agree to f32 tolerance; infinity/empty sentinels
+    (including the ``live`` capacity padding) agree exactly.
+    """
+    ks = jax.random.split(jax.random.PRNGKey(n + k), 6)
+    X = jax.random.normal(ks[0], (n, 6), jnp.float32)
+    a_prime = jax.random.normal(ks[1], (n,), jnp.float32)
+    kth_dist = jax.random.uniform(ks[2], (n,), jnp.float32, 0.5, 4.0)
+    kth_label = jax.random.normal(ks[3], (n,), jnp.float32)
+    Xt = jax.random.normal(ks[4], (m, 6), jnp.float32)
+    a_test = jax.random.normal(ks[5], (m,), jnp.float32)
+    live = (jnp.arange(n) < n - dead_tail)
+    got_lo, got_hi = iv_pallas(X, a_prime, kth_dist, kth_label, live, Xt,
+                               a_test, k=k, block_m=64, block_n=64,
+                               interpret=True)
+    want_lo, want_hi = ref.reg_interval_endpoints(
+        X, a_prime, kth_dist, kth_label, live, Xt, a_test, k)
+    for got, want in [(got_lo, want_lo), (got_hi, want_hi)]:
+        got, want = np.asarray(got), np.asarray(want)
+        assert got.shape == (m, n)
+        np.testing.assert_array_equal(np.isfinite(got), np.isfinite(want))
+        f = np.isfinite(want)
+        np.testing.assert_array_equal(got[~f], want[~f])  # +-inf pattern
+        np.testing.assert_allclose(got[f], want[f], atol=1e-4, rtol=1e-4)
 
 
 @pytest.mark.parametrize("cfg", [

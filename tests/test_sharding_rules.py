@@ -95,8 +95,7 @@ SHARDED_CP_SCRIPT = textwrap.dedent("""
     from repro.core.measures import knn as knn_m
     from repro.core import distributed as dist
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
     X, y = make_classification(n_samples=101, n_features=6, seed=0)
     X = X.astype(np.float32); y = y.astype(np.int32)
     Xte = X[:6] + 0.05
