@@ -62,7 +62,9 @@ def run(ns=(512, 2048), *, m=8, dim=16, k=7, eps=0.1, sessions=4,
             lambda a: jnp.broadcast_to(a, (sessions,) + a.shape), one)
         t_serve, iv_serve = _timeit(lambda: eng.intervals(st, Xt, eps))
 
-        # engine observe throughput (sliding window, all tenants, 1 tick)
+        # engine observe throughput (sliding window, all tenants): the
+        # per-tick path, then the same traffic chunked through
+        # observe_many (one scanned dispatch per half)
         key = jax.random.PRNGKey(1)
         xs = jax.random.normal(key, (obs_ticks, sessions, dim), jnp.float32)
         ys_ = jax.random.normal(key, (obs_ticks, sessions), jnp.float32)
@@ -74,6 +76,19 @@ def run(ns=(512, 2048), *, m=8, dim=16, k=7, eps=0.1, sessions=4,
             st2, p = eng.observe(st2, xs[t], ys_[t], taus)
         jax.block_until_ready(p)
         dt_obs = time.perf_counter() - t0
+
+        chunk = obs_ticks // 2
+        taus_many = jnp.broadcast_to(taus, (chunk, sessions))
+        st3 = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (sessions,) + a.shape), one)
+        st3, _ = eng.observe_many(  # compile + warmup chunk
+            st3, xs[:chunk], ys_[:chunk], taus_many)
+        jax.block_until_ready(st3.n)
+        t0 = time.perf_counter()
+        st3, p = eng.observe_many(st3, xs[chunk:2 * chunk],
+                                  ys_[chunk:2 * chunk], taus_many)
+        jax.block_until_ready(p)
+        dt_many = time.perf_counter() - t0
 
         per_std = t_std / m
         per_opt = t_opt / m
@@ -89,6 +104,11 @@ def run(ns=(512, 2048), *, m=8, dim=16, k=7, eps=0.1, sessions=4,
             "speedup_streaming_vs_standard": per_std / per_serve,
             "observe_session_steps_per_s":
                 sessions * (obs_ticks - 1) / dt_obs,
+            "observe_many_session_steps_per_s":
+                sessions * chunk / dt_many,
+            "observe_chunk": chunk,
+            "observe_per_tick_overhead_s_est":
+                dt_obs / (obs_ticks - 1) - dt_many / chunk,
             "intervals_finite_frac": float(np.mean(np.isfinite(
                 np.asarray(iv_serve)))),
             "optimized_equals_standard": bool(np.allclose(
@@ -104,6 +124,8 @@ def run(ns=(512, 2048), *, m=8, dim=16, k=7, eps=0.1, sessions=4,
               f" ({row['speedup_optimized_vs_standard']:6.1f}x)"
               f"  served {per_serve * 1e3:8.2f} ms/pt"
               f" ({row['speedup_streaming_vs_standard']:6.1f}x)"
+              f"  obs {row['observe_session_steps_per_s']:7.0f}/s"
+              f" chunked {row['observe_many_session_steps_per_s']:7.0f}/s"
               f"  bitexact={row['streaming_bit_identical_to_optimized']}")
     return results
 

@@ -1,7 +1,13 @@
 """Serving-engine throughput: sessions x steps/s for the micro-batched
 online CP step (observe: evict-if-full + incremental learn + smoothed
-p-value, all in one vmapped jitted dispatch) and the fused-kernel
-read-only predict. Writes BENCH_serve.json.
+p-value, all in one donated vmapped jitted dispatch), its chunked
+``observe_many`` form (T ticks per dispatch under one lax.scan), and
+the fused-kernel read-only predict. Writes BENCH_serve.json.
+
+The spread between the per-tick and chunked rows is the fixed
+per-dispatch overhead (host round-trip + buffer shuffling) that
+``observe_many`` amortizes; it is reported per tick as
+``per_tick_overhead_s_est``.
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--out BENCH_serve.json]
 """
@@ -26,6 +32,24 @@ def _bench_observe(eng, state, X, y, taus, steps):
     return state, time.perf_counter() - t0, steps - 1
 
 
+def _bench_observe_many(eng, state, X, y, taus, steps, chunk):
+    """Same traffic, chunked: one dispatch per ``chunk`` ticks."""
+    xs = jnp.swapaxes(X, 0, 1)  # (steps, S, dim)
+    ys = jnp.swapaxes(y, 0, 1)
+    ts = jnp.swapaxes(taus, 0, 1)
+    # warmup chunk (compile) outside the clock
+    state, p = eng.observe_many(state, xs[:chunk], ys[:chunk], ts[:chunk])
+    jax.block_until_ready(p)
+    ticks = 0
+    t0 = time.perf_counter()
+    for lo in range(chunk, steps - chunk + 1, chunk):
+        state, p = eng.observe_many(state, xs[lo:lo + chunk],
+                                    ys[lo:lo + chunk], ts[lo:lo + chunk])
+        ticks += chunk
+    jax.block_until_ready(p)
+    return state, time.perf_counter() - t0, ticks
+
+
 def _bench_predict(eng, state, Xq, repeats=3):
     out = eng.predict(state, Xq)
     jax.block_until_ready(out)
@@ -36,10 +60,12 @@ def _bench_predict(eng, state, Xq, repeats=3):
     return (time.perf_counter() - t0) / repeats
 
 
-def run(grid=((8, 128), (32, 128), (64, 256)), *, steps=192, dim=16, k=7,
-        queries=16):
+def run(grid=((8, 128), (32, 128), (8, 256), (64, 256)), *, steps=192,
+        dim=16, k=7, queries=16, chunk=64):
     from repro.serving import ServingEngine
 
+    # the chunked run needs one warmup chunk + at least one timed chunk
+    chunk = min(chunk, max(steps // 2, 1))
     results = []
     for n_sessions, capacity in grid:
         window = capacity // 2
@@ -54,6 +80,8 @@ def run(grid=((8, 128), (32, 128), (64, 256)), *, steps=192, dim=16, k=7,
                                   dtype=jnp.float32)
         state, dt, ticks = _bench_observe(eng, eng.init_state(), X, y, taus,
                                           steps)
+        _, dt_many, ticks_many = _bench_observe_many(
+            eng, eng.init_state(), X, y, taus, steps, chunk)
         Xq = jax.random.normal(kx, (n_sessions, queries, dim), jnp.float32)
         t_pred = _bench_predict(eng, state, Xq)
         row = {
@@ -66,12 +94,21 @@ def run(grid=((8, 128), (32, 128), (64, 256)), *, steps=192, dim=16, k=7,
             "observe_wall_s": dt,
             "session_steps_per_s": n_sessions * ticks / dt,
             "ticks_per_s": ticks / dt,
+            "chunk": chunk,
+            "observe_many_ticks": ticks_many,
+            "observe_many_wall_s": dt_many,
+            "session_steps_per_s_observe_many":
+                n_sessions * ticks_many / dt_many,
+            "ticks_per_s_observe_many": ticks_many / dt_many,
+            # fixed per-dispatch overhead the chunking amortizes away
+            "per_tick_overhead_s_est": dt / ticks - dt_many / ticks_many,
             "predict_wall_s_per_call": t_pred,
             "predict_pvalues_per_s": n_sessions * queries / t_pred,
         }
         results.append(row)
         print(f"[serve_bench] S={n_sessions:4d} cap={capacity:4d} "
               f"{row['session_steps_per_s']:10.0f} session-steps/s  "
+              f"{row['session_steps_per_s_observe_many']:10.0f} chunked  "
               f"{row['predict_pvalues_per_s']:10.0f} query-pvals/s")
     return results
 
@@ -81,11 +118,14 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--steps", type=int, default=192)
     ap.add_argument("--dim", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=64)
     ap.add_argument("--quick", action="store_true",
-                    help="single small config (CI smoke)")
+                    help="single config (CI smoke; capacity stays large "
+                         "enough that an O(cap^2) copy regression shows)")
     args = ap.parse_args(argv)
-    grid = ((8, 64),) if args.quick else ((8, 128), (32, 128), (64, 256))
-    results = run(grid, steps=args.steps, dim=args.dim)
+    grid = ((8, 256),) if args.quick else ((8, 128), (32, 128), (8, 256),
+                                           (64, 256))
+    results = run(grid, steps=args.steps, dim=args.dim, chunk=args.chunk)
     payload = {
         "bench": "serving_engine",
         "backend": jax.default_backend(),

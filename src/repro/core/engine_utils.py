@@ -1,0 +1,81 @@
+"""Host-side bookkeeping shared by the two serving engines.
+
+`serving.engine.ServingEngine` (classification) and
+`regression.engine.RegressionServingEngine` differ only in their state
+pytree and per-tick step; the stateful host-side logic around the jitted
+dispatch — grow-mode capacity provisioning, the sliding-window occupancy
+invariant, and the scan-chunk wrapper — is identical and easy to let
+drift apart. It lives here once, parameterized on an ``n_of`` accessor
+that reads the per-session occupancy array from the engine's state.
+(This module is import-neutral: both engine modules can use it without
+touching the ``repro.serving`` package __init__, which would be
+circular.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_chunk(vstep):
+    """Wrap a vmapped per-tick step into a T-tick ``lax.scan`` chunk.
+
+    One jitted dispatch advances T ticks; the leading-axis chunk length
+    is the only retrace axis (the scan is rolled). Donating the carry at
+    the jit boundary makes every per-tick (cap, cap) row/column insert
+    an in-place dynamic-update-slice.
+    """
+    def chunk(state, xs, ys, taus, windows, actives):
+        def body(s, inp):
+            x, y, tau, act = inp
+            s2, p = vstep(s, x, y, tau, windows, act)
+            return s2, p
+
+        return jax.lax.scan(body, state, (xs, ys, taus, actives))
+
+    return chunk
+
+
+def ensure_room(eng, state, ticks: int, n_of):
+    """Grow-mode host-side capacity check for the next ``ticks`` ticks.
+
+    n grows by at most 1 per tick, so a host counter upper-bounds
+    occupancy; the true max is synced only at startup and when the bound
+    would cross capacity (after external state swaps, call the engine's
+    ``reset_occupancy`` to re-sync). Mutates ``eng._n_bound``; returns
+    the (possibly grown) state.
+    """
+    if eng.window is not None:
+        return state
+    cap = state.capacity
+    if eng._n_bound is None or eng._n_bound + ticks > cap:
+        eng._n_bound = int(jnp.max(n_of(state)))
+        while eng._n_bound + ticks > cap:
+            state = eng.grow(state)
+            cap = state.capacity
+    eng._n_bound += ticks
+    return state
+
+
+def check_window_occupancy(eng, state, n_of) -> None:
+    """One-time ``n <= window`` invariant check for sliding engines.
+
+    The fused sliding step runs on the ``[:window]`` block of every
+    leaf, which is only valid while no session's occupancy exceeds the
+    window. Engine-produced states keep the invariant by construction;
+    this guards externally supplied states with a single device sync per
+    engine lifetime (``reset_occupancy`` re-arms it).
+    """
+    if eng.window is None or eng._w_checked:
+        return
+    nmax = int(jnp.max(n_of(state)))
+    if nmax > eng._wmax:
+        raise ValueError(
+            f"state occupancy {nmax} exceeds the sliding window "
+            f"{eng.window}: this engine keeps live rows inside the "
+            "[:window] block; evict down to the window (or use a "
+            "larger-window engine) before serving")
+    eng._w_checked = True
+
+
+__all__ = ["scan_chunk", "ensure_room", "check_window_occupancy"]

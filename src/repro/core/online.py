@@ -23,7 +23,60 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kops
+
 BIG = 1e30
+
+
+def cshift(a, s, fill):
+    """Conditionally drop the leading row: shift rows up by ``s`` (a
+    traced 0/1 scalar) with ``fill`` entering at the tail — one padded
+    dynamic slice, bitwise identity when ``s == 0``. The compaction
+    primitive of the serving engines' fused sliding step."""
+    pad = [(0, 1)] + [(0, 0)] * (a.ndim - 1)
+    ap = jnp.pad(a, pad, constant_values=fill)
+    start = (s,) + (jnp.int32(0),) * (a.ndim - 1)
+    return jax.lax.dynamic_slice(ap, start, a.shape)
+
+
+def drop_backfill_core(L, es, cand, Ds, *, k):
+    """Shared decremental list repair for the serving engines' eviction.
+
+    For each row: drop the first slot of the ascending k-best list ``L``
+    holding the evicted distance ``es`` (the evicted point has the
+    lowest arrival index, so on ties it occupies the first slot holding
+    its value), then backfill the new k-th best by multiset rank over
+    the stored distances: the k-1 survivors hold every remaining
+    candidate value below their max t' plus m' occurrences of t' itself,
+    so the next value is t' again if the window (``Ds`` masked by
+    ``cand``) holds more than m' occurrences of it, else the smallest
+    stored distance above t'. Every output is a selected stored value —
+    bit-identical to a full re-sort, a fraction of the compute.
+
+    Returns ``(newL, pos0, cols, b, tprime, mprime)`` so label-carrying
+    callers (the regression state) can mirror the move on a parallel
+    label matrix. Both exactness proofs (classification and regression)
+    rest on this one function.
+    """
+    cap = L.shape[0]
+    pos0 = jnp.sum((L < es[:, None]).astype(jnp.int32), axis=1)
+    Lup = jnp.concatenate([L[:, 1:], jnp.full_like(L[:, :1], BIG)], axis=1)
+    # t' = max of the k-1 survivors; m' = its multiplicity among them
+    if k >= 2:
+        tprime = jnp.where(pos0 <= k - 2, L[:, k - 1], L[:, k - 2])
+    else:
+        # empty survivor list: below every distance (distances are >= 0)
+        tprime = jnp.full((cap,), -1.0, L.dtype)
+    mprime = (jnp.sum((L == tprime[:, None]).astype(jnp.int32), axis=1)
+              - (es == tprime).astype(jnp.int32))
+    cnt = jnp.sum(jnp.where(cand & (Ds == tprime[:, None]), 1, 0), axis=1)
+    gtmin = jnp.min(
+        jnp.where(cand & (Ds > tprime[:, None]), Ds, BIG), axis=1)
+    b = jnp.where(cnt > mprime, tprime, gtmin)
+    cols = jnp.arange(k)
+    newL = jnp.where(cols[None, :] < pos0[:, None], L,
+                     jnp.where(cols[None, :] < k - 1, Lup, b[:, None]))
+    return newL, pos0, cols, b, tprime, mprime
 
 
 @jax.tree_util.register_pytree_node_class
@@ -84,9 +137,12 @@ def observe_with_dists(state: OnlineKnnState, x_new, y_new, tau, *, k):
 def _observe_impl(state: OnlineKnnState, x_new, y_new, tau, *, k):
     cap = state.X.shape[0]
     live = jnp.arange(cap) < state.n
-    d = jnp.sqrt(jnp.maximum(
-        jnp.sum((state.X - x_new[None]) ** 2, axis=-1), 0.0))
-    d = jnp.where(live, d, BIG)
+    # fused distance row + same-label k-best merge: one Pallas pass on
+    # TPU; the CPU/f64 reference is expression-identical to the historic
+    # inline code, so the stream's p-value bits are unchanged
+    d, merged, _ = kops.stream_update(
+        state.X, state.y, state.best, None, x_new, y_new, state.n,
+        mode="class")
     same = (state.y == y_new) & live
 
     # candidate score: sum of k best same-label distances
@@ -100,16 +156,16 @@ def _observe_impl(state: OnlineKnnState, x_new, y_new, tau, *, k):
     upd = same & (d < kth)
     alphas = base + jnp.where(upd, d, kth)
 
-    # smoothed p-value over live points + the candidate itself
+    # smoothed p-value over live points + the candidate itself; the
+    # astype is a no-op at f32/f64 but pins sub-f32 state dtypes (the
+    # int/float promotion otherwise widens p to f32, which breaks the
+    # engine's masked cond whose skip branch is a state-dtype NaN)
     gt = jnp.sum(jnp.where(live, alphas > alpha, False))
     eq = jnp.sum(jnp.where(live, alphas == alpha, False))
-    p = (gt + tau * (eq + 1.0)) / (state.n + 1.0)
+    p = ((gt + tau * (eq + 1.0)) / (state.n + 1.0)).astype(state.X.dtype)
 
-    # learn: merge d into same-label neighbour lists; append the new row
-    cand_col = jnp.where(same, d, BIG)
-    merged = jnp.sort(
-        jnp.concatenate([state.best, cand_col[:, None]], axis=1), axis=1
-    )[:, :k]
+    # learn: the merged lists come from the fused pass; the new row's own
+    # list is the k best same-label distances seen so far
     own = jnp.sort(-jax.lax.top_k(-cand, k)[0])
     idx = state.n
     new_state = OnlineKnnState(

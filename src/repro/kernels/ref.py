@@ -109,6 +109,122 @@ def reg_interval_endpoints(
     return lo, hi
 
 
+_BIG = 1e30  # matches core.online.BIG / core.regression.BIG
+
+
+def stream_update(
+    X: jnp.ndarray, y: jnp.ndarray, nbr_d: jnp.ndarray, nbr_y: jnp.ndarray,
+    x_new: jnp.ndarray, y_new: jnp.ndarray, n: jnp.ndarray, *, mode: str,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused streaming observe front end: distance row + k-best merge.
+
+    One incoming point against a capacity-padded window: computes the
+    (cap,) distance row (BIG on inert rows), and merges the point into
+    every live row's ordered k-best neighbour list. Two modes, matching
+    the two serving engines' maintained statistics bit-for-bit:
+
+    * ``mode="class"`` — the paper's simplified-k-NN classification state
+      (``core.online``): distances in the row-difference form
+      ``sqrt(sum((x_i - x)^2))``, a row's list admits the candidate iff
+      same label; ``nbr_y`` is passed through untouched.
+    * ``mode="reg"`` — the Section 8.1 regression state
+      (``regression.stream``): distances in the MXU-friendly
+      ``a^2 + b^2 - 2ab`` form of ``sq_dists``, a row's list admits the
+      candidate iff it beats the current k-th distance (ties keep the
+      incumbent); neighbour *labels* ride along, inserted strictly below
+      equal distances (fit's stable-argsort tie rule), and BIG slots
+      carry the row's own label.
+
+    The caller keeps the new row's own top-k list, the D row/column
+    scatter (an O(cap) in-place dynamic-update-slice under donation) and
+    the p-value — none of which belong in a tiled kernel. Returns
+    ``(d_row (cap,), nbr_d' (cap, k), nbr_y' (cap, k))``. Semantics of
+    record for the Pallas kernel in ``stream_update.py``; expressions
+    mirror ``core.online._observe_impl`` / ``regression.stream.observe``
+    exactly, so routing through this oracle keeps the streaming states
+    bit-identical to refit-from-scratch.
+    """
+    cap, k = nbr_d.shape
+    live = jnp.arange(cap) < n
+    if mode == "class":
+        d = jnp.sqrt(jnp.maximum(
+            jnp.sum((X - x_new[None]) ** 2, axis=-1), 0.0))
+        d = jnp.where(live, d, _BIG)
+        same = (y == y_new) & live
+        cand = jnp.where(same, d, _BIG)
+        merged = jnp.sort(
+            jnp.concatenate([nbr_d, cand[:, None]], axis=1), axis=1)[:, :k]
+        return d, merged, nbr_y
+    if mode != "reg":
+        raise ValueError(f"unknown stream_update mode {mode!r}")
+    d = jnp.sqrt(jnp.maximum(sq_dists(x_new[None], X)[0], 0.0))
+    d_row = jnp.where(live, d, _BIG)
+    enters = live & (d < nbr_d[:, -1])
+    cand_d = jnp.where(enters, d, _BIG)
+    merged_d = jnp.concatenate([nbr_d, cand_d[:, None]], axis=1)
+    merged_y = jnp.concatenate(
+        [nbr_y, jnp.full((cap, 1), y_new, nbr_y.dtype)], axis=1)
+    order = jnp.argsort(merged_d, axis=1, stable=True)
+    nd = jnp.take_along_axis(merged_d, order, axis=1)[:, :k]
+    ny = jnp.take_along_axis(merged_y, order, axis=1)[:, :k]
+    ny = jnp.where(nd >= _BIG, y[:, None], ny)
+    return d_row, nd, ny
+
+
+def _ordered_insert(L, c):
+    """Branch-free ordered insert: candidate ``c`` (cap,) into each
+    ascending row of ``L`` (cap, k), strictly after equal values, largest
+    entry dropped. Equivalent to ``sort(concat([L, c], 1))[:, :k]`` with
+    the stable candidate-last tie rule — every output is a selected
+    input value, so the two forms are bit-identical. Returns
+    ``(newL, pos, cols)`` so callers can mirror the move on a parallel
+    label matrix."""
+    k = L.shape[1]
+    pos = jnp.sum((L <= c[:, None]).astype(jnp.int32), axis=1,
+                  keepdims=True)
+    cols = jnp.arange(k)[None, :]
+    Lsh = jnp.concatenate([L[:, :1], L[:, :k - 1]], axis=1)
+    newL = jnp.where(cols < pos, L,
+                     jnp.where(cols == pos, c[:, None], Lsh))
+    return newL, pos, cols
+
+
+def stream_update_fast(
+    X: jnp.ndarray, y: jnp.ndarray, nbr_d: jnp.ndarray, nbr_y: jnp.ndarray,
+    x_new: jnp.ndarray, y_new: jnp.ndarray, n: jnp.ndarray, *, mode: str,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sortless form of ``stream_update`` — the production CPU path.
+
+    Bit-identical to the sort-based oracle above (the ordered insert
+    selects the same values the sort would; the parity tests pin the two
+    together, ties included) but avoids XLA's comparator sort, which
+    dominates the observe tick on CPU at large capacities.
+    """
+    cap, k = nbr_d.shape
+    live = jnp.arange(cap) < n
+    if mode == "class":
+        d = jnp.sqrt(jnp.maximum(
+            jnp.sum((X - x_new[None]) ** 2, axis=-1), 0.0))
+        d = jnp.where(live, d, _BIG)
+        same = (y == y_new) & live
+        cand = jnp.where(same, d, _BIG)
+        merged, _, _ = _ordered_insert(nbr_d, cand)
+        return d, merged, nbr_y
+    if mode != "reg":
+        raise ValueError(f"unknown stream_update mode {mode!r}")
+    d = jnp.sqrt(jnp.maximum(sq_dists(x_new[None], X)[0], 0.0))
+    d_row = jnp.where(live, d, _BIG)
+    enters = live & (d < nbr_d[:, -1])
+    cand_d = jnp.where(enters, d, _BIG)
+    newL, pos, cols = _ordered_insert(nbr_d, cand_d)
+    Ysh = jnp.concatenate([nbr_y[:, :1], nbr_y[:, :k - 1]], axis=1)
+    newY = jnp.where(cols < pos, nbr_y,
+                     jnp.where(cols == pos,
+                               jnp.asarray(y_new, nbr_y.dtype), Ysh))
+    newY = jnp.where(newL >= _BIG, y[:, None], newY)
+    return d_row, newL, newY
+
+
 def flash_attention(
     q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     causal: bool = True, window: int | None = None, scale: float | None = None,

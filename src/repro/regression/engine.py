@@ -15,6 +15,8 @@ Usage::
     state = eng.init_state()
     for t in range(T):
         state, pvals = eng.observe(state, x_t, y_t, tau_t)  # (64,) smoothed
+    # or: T ticks in ONE dispatch (xs: (T, 64, 16), ys/taus: (T, 64))
+    state, pvals = eng.observe_many(state, xs, ys, taus)    # (T, 64)
     iv = eng.intervals(state, x_query, epsilon=0.1)  # (64, m, 2)
 
 Per-session state is bit-identical to feeding that session's stream
@@ -24,6 +26,13 @@ interval read path routes through the fused Pallas kernel on TPU. The
 per-tick ``observe`` p-values (each tenant's observed label against its
 current window) feed the same exchangeability martingales as the
 classification engine — streaming drift detection for regression tenants.
+
+As in ``serving.engine``, the observe path is O(cap) per tick: the
+jitted step donates its input state (the (S, cap, cap) distance
+matrices update in place — the input ``state`` is consumed; pass
+``donate=False`` for copy semantics), and ``observe_many`` amortizes
+dispatch overhead by scanning a whole chunk of ticks under one jit
+(``observe`` is its T=1 case; both bit-neutral, property-tested).
 """
 from __future__ import annotations
 
@@ -33,18 +42,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine_utils
 from repro.regression import session as sess_m
 from repro.regression.stream import RegStreamState
-
-
-def _session_step(state, x, y, tau, window, active, *, k):
-    def do(s):
-        return sess_m.observe_sliding(s, x, y, tau, window, k=k)
-
-    def skip(s):
-        return s, jnp.asarray(jnp.nan, dtype=s.X.dtype)
-
-    return jax.lax.cond(active, do, skip, state)
 
 
 class RegressionServingEngine:
@@ -58,10 +58,15 @@ class RegressionServingEngine:
     k:          k-NN neighbourhood size (paper Section 8.1 measure).
     window:     sliding-window length (<= capacity); None => grow mode
                 (capacity doubles when full instead of evicting).
+    donate:     donate the input state to the jitted observe step (the
+                O(cap) in-place path). The state passed to ``observe`` /
+                ``observe_many`` is deleted by the call; reuse raises.
+                ``False`` restores copy semantics (input stays valid).
     """
 
     def __init__(self, *, n_sessions: int, capacity: int, dim: int, k: int,
-                 window: int | None = None, dtype=jnp.float32):
+                 window: int | None = None, dtype=jnp.float32,
+                 donate: bool = True):
         if window is not None and window > capacity:
             raise ValueError(f"window {window} exceeds capacity {capacity}")
         if window is not None and window < 1:
@@ -74,8 +79,23 @@ class RegressionServingEngine:
         self.k = k
         self.window = window
         self.dtype = dtype
-        step = functools.partial(_session_step, k=k)
-        self._step = jax.jit(jax.vmap(step, in_axes=(0, 0, 0, 0, 0, 0)))
+        self.donate = donate
+        # the fused sliding step: evict-if-full + observe + active mask
+        # in one pass (no cond/select on the (cap, cap) leaves); grow
+        # mode (window=None) statically drops the eviction machinery.
+        # A sliding window statically bounds occupancy, so the tick runs
+        # on the [:window] block of every leaf (cost scales with the
+        # window, not the padded capacity) — observe_many verifies the
+        # n <= window invariant once per externally supplied state.
+        wmax = None if window is None else max(min(window, capacity), k)
+        step = functools.partial(sess_m._sliding_step, k=k,
+                                 evictable=window is not None, wmax=wmax)
+        self._wmax = wmax
+        self._w_checked = False
+        vstep = jax.vmap(step, in_axes=(0, 0, 0, 0, 0, 0))
+        self._step_many = jax.jit(
+            engine_utils.scan_chunk(vstep),
+            donate_argnums=(0,) if donate else ())
         # lax.map, not vmap: the scanned body keeps the exact per-session
         # graph, so served reads stay bit-identical to the single-session
         # path (vmap re-batches the distance GEMMs and count reductions,
@@ -115,29 +135,44 @@ class RegressionServingEngine:
         bool (default all). Returns (state, pvalues (S,)) — the smoothed
         online p-value of each observed label, NaN on inactive slots. In
         grow mode, auto-doubles capacity first if any session is full
-        (host-side sync + retrace, O(log n) times total).
+        (host-side sync + retrace, O(log n) times total). The T=1 case
+        of ``observe_many`` (bit-identical, tested); with ``donate=True``
+        (default) the input ``state`` is consumed.
         """
         if active is None:
             active = jnp.ones((self.n_sessions,), dtype=bool)
-        if self.window is None:
-            # n grows by at most 1 per tick; a host counter upper-bounds
-            # occupancy, synced only at startup and when the bound hits
-            # capacity (call reset_occupancy after external state swaps)
-            cap = state.capacity
-            if self._n_bound is None or self._n_bound >= cap:
-                self._n_bound = int(jnp.max(state.n))
-                while self._n_bound >= cap:
-                    state = self.grow(state)
-                    cap = state.capacity
-            self._n_bound += 1
-        return self._step(state, x, y.astype(self.dtype),
-                          tau.astype(self.dtype), self._windows(state),
-                          active)
+        state, p = self.observe_many(
+            state, x[None], y[None], tau[None], active[None])
+        return state, p[0]
+
+    def observe_many(self, state: RegStreamState, xs, ys, taus,
+                     active=None):
+        """A chunk of T micro-batched ticks in ONE jitted dispatch.
+
+        xs: (T, S, dim); ys: (T, S); taus: (T, S); active: (T, S) bool
+        (default all). Returns (state, pvalues (T, S)) — tick t's row is
+        bit-identical to calling ``observe`` T times (the chunk is a
+        ``lax.scan`` over the same per-tick step; property-tested). In
+        grow mode the whole chunk's worst-case occupancy is provisioned
+        up front (capacity doubles until ``n + T <= cap``), so the scan
+        never needs a mid-chunk host sync. With ``donate=True`` the
+        input ``state`` is consumed.
+        """
+        if active is None:
+            active = jnp.ones(xs.shape[:2], dtype=bool)
+        state = engine_utils.ensure_room(self, state, xs.shape[0],
+                                         lambda s: s.n)
+        engine_utils.check_window_occupancy(self, state, lambda s: s.n)
+        return self._step_many(state, xs, ys.astype(self.dtype),
+                               taus.astype(self.dtype),
+                               self._windows(state), active)
 
     def reset_occupancy(self) -> None:
-        """Forget the host-side occupancy bound (grow mode); the next
-        ``observe`` re-syncs it from device."""
+        """Forget the host-side occupancy bound (grow mode) and the
+        window-invariant check; the next ``observe`` re-syncs/re-checks
+        from device."""
         self._n_bound = None
+        self._w_checked = False
 
     def grow(self, state: RegStreamState, factor: int = 2) -> RegStreamState:
         """Double every session's capacity (host-side, preserves state)."""

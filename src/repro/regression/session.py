@@ -34,6 +34,7 @@ from repro.core.regression import BIG, _interval_ge, hull_sweep
 from repro.kernels import ops as kops
 from repro.regression import stream
 from repro.regression.stream import RegStreamState
+from repro.core.online import cshift
 
 init = stream.init
 
@@ -61,8 +62,7 @@ def _ab_padded(state: RegStreamState, X_test, *, k):
     return a_vec, b_vec, a, live
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def observe(state: RegStreamState, x_new, y_new, tau, *, k):
+def _observe(state: RegStreamState, x_new, y_new, tau, *, k):
     """Smoothed online p-value of (x_new, y_new), then learn it.
 
     The p-value tests the *observed label* against the current window
@@ -90,25 +90,130 @@ def observe(state: RegStreamState, x_new, y_new, tau, *, k):
     alpha = jnp.abs(a + t)
     gt = jnp.sum(jnp.where(live, alphas > alpha, False))
     eq = jnp.sum(jnp.where(live, alphas == alpha, False))
-    p = (gt + tau * (eq + 1.0)) / (state.n + 1.0)
+    # astype: no-op at f32/f64, pins sub-f32 dtypes (see core.online)
+    p = ((gt + tau * (eq + 1.0)) / (state.n + 1.0)).astype(state.X.dtype)
     return new_state, p
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def observe_sliding(state: RegStreamState, x_new, y_new, tau, window, *, k):
+observe = functools.partial(jax.jit, static_argnames=("k",))(_observe)
+#: Donating form of ``observe``: the (cap, cap) ``D`` row/column insert
+#: updates in place instead of copying the matrix. The input state is
+#: DELETED by the call. Numerics are identical to ``observe``.
+observe_donated = functools.partial(
+    jax.jit, static_argnames=("k",), donate_argnums=(0,))(_observe)
+
+
+def _sliding_step(state: RegStreamState, x_new, y_new, tau, window, active,
+                  *, k, evictable: bool = True, wmax: int | None = None):
+    """One fused sliding-window tick: evict-if-full, observe, all gated.
+
+    Regression counterpart of ``serving.session._sliding_step`` — the
+    semantics of ``cond(evict_oldest) -> observe`` with an ``active``
+    mask, restructured so the (cap, cap) matrix moves once per tick: a
+    per-lane conditional compaction shift (a padded dynamic slice at
+    offset s ∈ {0, 1}), the labeled list repair, then the observe core
+    with arithmetically gated writes (inactive lanes rewrite their
+    current values — masked state stays bitwise unchanged, p-value NaN).
+    Bit-identical to the unfused form (tested). ``evictable=False``
+    (static) drops the compaction for the grow-mode engine; ``wmax``
+    (static, the sliding engine's window bound on occupancy) confines
+    the whole tick to the ``[:wmax]`` block of every leaf — per-tick
+    cost scales with the window, not the padded capacity.
+    """
+    cap = state.capacity
+    if wmax is not None and wmax < cap:
+        sub = RegStreamState(
+            state.X[:wmax], state.y[:wmax], state.D[:wmax, :wmax],
+            state.nbr_d[:wmax], state.nbr_y[:wmax], state.n)
+        sub2, p = _sliding_step(sub, x_new, y_new, tau, window, active,
+                                k=k, evictable=evictable)
+        return RegStreamState(
+            X=state.X.at[:wmax].set(sub2.X),
+            y=state.y.at[:wmax].set(sub2.y),
+            D=state.D.at[:wmax, :wmax].set(sub2.D),
+            nbr_d=state.nbr_d.at[:wmax].set(sub2.nbr_d),
+            nbr_y=state.nbr_y.at[:wmax].set(sub2.nbr_y),
+            n=sub2.n), p
+    act = jnp.asarray(active)
+    if evictable:
+        ev = act & (state.n >= window)
+        s = ev.astype(jnp.int32)
+        live = jnp.arange(cap) < state.n
+        dcol = state.D[:, 0]
+        affected = ev & live & (dcol <= state.nbr_d[:, -1])
+
+        # conditional compaction: pad each leaf by one (the pad value IS
+        # the compaction fill) and take one dynamic slice at offset s
+        X1 = cshift(state.X, s, 0)
+        y1 = cshift(state.y, s, 0)
+        L1 = cshift(state.nbr_d, s, BIG)
+        Ly1 = cshift(state.nbr_y, s, 0)
+        Dp = jnp.pad(state.D, ((0, 1), (0, 1)), constant_values=BIG)
+        D1 = jax.lax.dynamic_slice(Dp, (s, s), (cap, cap))
+        aff1 = cshift(affected, s, False)
+        es1 = cshift(dcol, s, BIG)
+        n1 = state.n - s
+        live1 = jnp.arange(cap) < n1
+        nbr_d1, nbr_y1 = stream._drop_backfill_labeled(
+            L1, Ly1, es1, live1[None, :], D1, y1, aff1, k=k)
+    else:
+        X1, y1, D1 = state.X, state.y, state.D
+        nbr_d1, nbr_y1, n1 = state.nbr_d, state.nbr_y, state.n
+        live1 = jnp.arange(cap) < n1
+
+    # learn (mirrors stream._observe, writes gated on ``active``)
+    idx = n1
+    y_new = jnp.asarray(y_new, y1.dtype)
+    d_row, nbr_d_m, nbr_y_m = kops.stream_update(
+        X1, y1, nbr_d1, nbr_y1, x_new, y_new, n1, mode="reg")
+    row = jnp.where(act, d_row, D1[idx, :])  # D symmetric: row == col
+    D2 = D1.at[idx, :].set(row).at[:, idx].set(row)
+    y2 = y1.at[idx].set(jnp.where(act, y_new, y1[idx]))
+    own_neg, own_idx = jax.lax.top_k(-d_row, k)
+    own_d = -own_neg
+    own_y = y2[own_idx]
+    own_y = jnp.where(own_d >= BIG, y_new, own_y)
+    new_state = RegStreamState(
+        X=X1.at[idx].set(jnp.where(act, x_new, X1[idx])),
+        y=y2,
+        D=D2,
+        nbr_d=jnp.where(act, nbr_d_m.at[idx].set(own_d), nbr_d1),
+        nbr_y=jnp.where(act, nbr_y_m.at[idx].set(own_y), nbr_y1),
+        n=n1 + act,
+    )
+
+    # price the observed label against the pre-learn window (mirrors
+    # ``_observe``'s p-value block bit-for-bit)
+    kth = nbr_d1[:, -1]
+    a_prime = y1 - jnp.sum(nbr_y1, axis=1) / k
+    enters = live1 & (d_row < kth)
+    a_vec = jnp.where(enters, a_prime + nbr_y1[:, -1] / k, a_prime)
+    b_vec = jnp.where(enters, -1.0 / k, 0.0)
+    a = -jnp.sum(y1[own_idx]) / k
+
+    alphas = jnp.abs(a_vec + b_vec * y_new)
+    alpha = jnp.abs(a + y_new)
+    gt = jnp.sum(jnp.where(live1, alphas > alpha, False))
+    eq = jnp.sum(jnp.where(live1, alphas == alpha, False))
+    p = ((gt + tau * (eq + 1.0)) / (n1 + 1.0)).astype(X1.dtype)
+    p = jnp.where(act, p, jnp.asarray(jnp.nan, dtype=X1.dtype))
+    return new_state, p
+
+
+def _observe_sliding(state: RegStreamState, x_new, y_new, tau, window, *, k):
     """Evict-if-full then observe: one fixed-shape sliding-window step.
 
     ``window`` is a traced scalar (per-tenant window sizes never
-    retrace). Under vmap the cond lowers to a select — both branches
-    run, lanes that don't evict keep their state bitwise unchanged.
+    retrace). The fused ``_sliding_step`` with every lane active.
     """
-    state = jax.lax.cond(
-        state.n >= window,
-        lambda s: stream.evict_oldest(s, k=k),
-        lambda s: s,
-        state,
-    )
-    return observe(state, x_new, y_new, tau, k=k)
+    return _sliding_step(state, x_new, y_new, tau, window, True, k=k)
+
+
+observe_sliding = functools.partial(
+    jax.jit, static_argnames=("k",))(_observe_sliding)
+#: Donating form of ``observe_sliding`` — same numerics, input deleted.
+observe_sliding_donated = functools.partial(
+    jax.jit, static_argnames=("k",), donate_argnums=(0,))(_observe_sliding)
 
 
 def grow(state: RegStreamState, factor: int = 2) -> RegStreamState:
@@ -194,5 +299,6 @@ def pvalues(state: RegStreamState, X_test, t_query, *, k):
     return (cnt + 1.0) / (state.n + 1.0)
 
 
-__all__ = ["RegStreamState", "init", "observe", "observe_sliding", "grow",
+__all__ = ["RegStreamState", "init", "observe", "observe_donated",
+           "observe_sliding", "observe_sliding_donated", "grow",
            "intervals", "pvalues"]

@@ -39,17 +39,9 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.core.online import drop_backfill_core
 from repro.core.regression import BIG, KnnRegState
 from repro.kernels import ops as kops
-
-
-def _dist_row(x, X):
-    """Euclidean distances from ``x`` to every row of ``X``.
-
-    Must stay the exact expression ``regression._dists`` lowers to for one
-    row — streaming bit-exactness vs ``fit`` rests on it.
-    """
-    return jnp.sqrt(jnp.maximum(kops.sq_dists(x[None], X)[0], 0.0))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -117,8 +109,7 @@ def state_view(state: RegStreamState, *, k) -> KnnRegState:
                        state.nbr_d[:, -1], state.nbr_y[:, -1])
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def observe(state: RegStreamState, x_new, y_new, *, k):
+def _observe(state: RegStreamState, x_new, y_new, *, k):
     """Learn one example in O(cap k): the paper's incremental update.
 
     Returns ``(new_state, d_row)`` — ``d_row`` is the (cap,) vector of
@@ -126,27 +117,21 @@ def observe(state: RegStreamState, x_new, y_new, *, k):
     callers that price the point before learning it (``session.observe``).
     Precondition: n < capacity (callers grow or evict first).
     """
-    cap = state.capacity
     idx = state.n
-    live = jnp.arange(cap) < state.n
     y_new = jnp.asarray(y_new, state.y.dtype)
 
-    d = _dist_row(x_new, state.X)
-    d_row = jnp.where(live, d, BIG)  # BIG at self (idx >= n) and inert
+    # fused distance row + gated ordered merge into every live row's
+    # (nbr_d, nbr_y) list — one Pallas pass on TPU; the CPU/f64 reference
+    # is expression-identical to the historic inline code (strict d < kth
+    # gate, stable-argsort insert-after-equals tie rule, BIG slots carry
+    # the row's own label), so streaming bits vs ``fit`` are unchanged
+    d_row, nbr_d, nbr_y = kops.stream_update(
+        state.X, state.y, state.nbr_d, state.nbr_y, x_new, y_new,
+        state.n, mode="reg")
+    # one row + one column of D: under a donating jit these two updates
+    # lower to in-place dynamic-update-slices — O(cap) HBM traffic, not
+    # an O(cap^2) copy of the matrix
     D = state.D.at[idx, :].set(d_row).at[:, idx].set(d_row)
-
-    # existing rows: the new point enters row i's k-NN list iff d < kth
-    # (strict: ties keep the incumbent, whose index is lower — top_k's rule)
-    enters = live & (d < state.nbr_d[:, -1])
-    cand_d = jnp.where(enters, d, BIG)
-    merged_d = jnp.concatenate([state.nbr_d, cand_d[:, None]], axis=1)
-    merged_y = jnp.concatenate(
-        [state.nbr_y, jnp.full((cap, 1), y_new, state.nbr_y.dtype)], axis=1)
-    # stable sort with the candidate appended last == insert after equal
-    # distances (the candidate's index is the largest) — fit's tie order
-    order = jnp.argsort(merged_d, axis=1, stable=True)
-    nbr_d = jnp.take_along_axis(merged_d, order, axis=1)[:, :k]
-    nbr_y = jnp.take_along_axis(merged_y, order, axis=1)[:, :k]
 
     # the new row's own list: top_k over its distance row (BIG at self),
     # exactly fit's per-row computation
@@ -157,7 +142,6 @@ def observe(state: RegStreamState, x_new, y_new, *, k):
     # missing-neighbour slots carry the row's own label (fit convention:
     # at n == k the one BIG entry is the masked self-diagonal)
     own_y = jnp.where(own_d >= BIG, y_new, own_y)
-    nbr_y = jnp.where(nbr_d >= BIG, state.y[:, None], nbr_y)
 
     new_state = RegStreamState(
         X=state.X.at[idx].set(x_new),
@@ -170,8 +154,17 @@ def observe(state: RegStreamState, x_new, y_new, *, k):
     return new_state, d_row
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def evict(state: RegStreamState, i, *, k) -> RegStreamState:
+observe = functools.partial(jax.jit, static_argnames=("k",))(_observe)
+#: ``observe`` whose input state is donated: the capacity-padded buffers
+#: (most importantly the (cap, cap) ``D``) are updated in place instead of
+#: copied. The input state is DELETED by the call — reusing it afterwards
+#: raises ``RuntimeError: Array has been deleted``. Numerics are identical
+#: to ``observe``.
+observe_donated = functools.partial(
+    jax.jit, static_argnames=("k",), donate_argnums=(0,))(_observe)
+
+
+def _evict(state: RegStreamState, i, *, k) -> RegStreamState:
     """Forget live row ``i`` in O(cap^2) worst case: decremental update.
 
     Only rows whose k-NN list contained the evicted point are touched;
@@ -221,10 +214,89 @@ def evict(state: RegStreamState, i, *, k) -> RegStreamState:
     )
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def evict_oldest(state: RegStreamState, *, k) -> RegStreamState:
-    """Sliding-window form: forget the oldest live point (row 0)."""
-    return evict(state, 0, k=k)
+evict = functools.partial(jax.jit, static_argnames=("k",))(_evict)
+#: Donating form of ``evict`` — same numerics, input state deleted.
+evict_donated = functools.partial(
+    jax.jit, static_argnames=("k",), donate_argnums=(0,))(_evict)
+
+
+def _evict_oldest(state: RegStreamState, *, k) -> RegStreamState:
+    """Sliding-window form: forget the oldest live point (row 0).
+
+    Specialization of ``evict`` that skips the full top_k recompute:
+    the evicted point has the LOWEST arrival index, so on distance ties
+    it sorts first — if it is in a row's k-NN list at all it occupies
+    the first slot holding its distance, and the repair is an O(k) drop
+    + one backfill. The backfill value comes by multiset rank over the
+    stored distances (see ``serving.session.evict_oldest``); its *label*
+    is the (r+1)-th lowest-indexed candidate at that distance, where
+    r counts the list's surviving occurrences of the value — exactly
+    fit's ties-toward-lower-index order, so the result stays bit-exact
+    vs refit (property-tested). Replaces an O(cap^2 log k) top_k with a
+    few O(cap^2) masked reductions — the sliding-window hot path.
+    Precondition: n >= 1 (guarded by callers; under vmap+select the n=0
+    lanes compute garbage that the caller's select discards).
+    """
+    cap = state.capacity
+    live = jnp.arange(cap) < state.n
+    dcol = state.D[:, 0]
+    kth = state.nbr_d[:, -1]
+    affected = live & (dcol <= kth)
+
+    def shift(a, fill):
+        return jnp.concatenate([a[1:], jnp.full_like(a[:1], fill)], axis=0)
+
+    Xs = shift(state.X, 0)
+    ys = shift(state.y, 0)
+    Ds = shift(state.D, BIG)
+    Ds = jnp.concatenate(
+        [Ds[:, 1:], jnp.full_like(Ds[:, :1], BIG)], axis=1)
+    L = shift(state.nbr_d, BIG)
+    Ly = shift(state.nbr_y, 0)
+    aff = shift(affected, False)
+    es = shift(dcol, BIG)
+
+    n2 = state.n - 1
+    live2 = jnp.arange(cap) < n2
+    cand = live2[None, :]  # self-distances are BIG on the diagonal
+    nbr_d2, nbr_y2 = _drop_backfill_labeled(L, Ly, es, cand, Ds, ys, aff,
+                                            k=k)
+    return RegStreamState(
+        X=Xs, y=ys, D=Ds, nbr_d=nbr_d2, nbr_y=nbr_y2, n=n2)
+
+
+def _drop_backfill_labeled(L, Ly, es, cand, Ds, ys, aff, *, k):
+    """Repair each (distance, label) list flagged in ``aff``: the shared
+    distance repair (``core.online.drop_backfill_core``) plus the label
+    bookkeeping — the backfill point's label follows fit's ties-toward-
+    lower-index order. Rows not flagged pass through untouched.
+    """
+    newL, pos0, cols, b, tprime, mprime = drop_backfill_core(
+        L, es, cand, Ds, k=k)
+
+    # the backfill label: among candidates at distance b (in index
+    # order) skip the r occurrences the surviving list already holds —
+    # they are the r lowest-indexed ones, fit's tie order
+    r = jnp.where(b == tprime, mprime, 0)
+    mask_b = cand & (Ds == b[:, None])
+    csum = jnp.cumsum(mask_b.astype(jnp.int32), axis=1)
+    pick = mask_b & (csum == r[:, None] + 1)
+    yb = ys[jnp.argmax(pick, axis=1)]  # b >= BIG rows fixed up below
+
+    Lyup = jnp.concatenate([Ly[:, 1:], Ly[:, :1]], axis=1)
+    newLy = jnp.where(cols[None, :] < pos0[:, None], Ly,
+                      jnp.where(cols[None, :] < k - 1, Lyup, yb[:, None]))
+    # missing-neighbour slots carry the row's own label (fit convention)
+    newLy = jnp.where(newL >= BIG, ys[:, None], newLy)
+    return (jnp.where(aff[:, None], newL, L),
+            jnp.where(aff[:, None], newLy, Ly))
+
+
+evict_oldest = functools.partial(
+    jax.jit, static_argnames=("k",))(_evict_oldest)
+#: Donating form of ``evict_oldest`` — same numerics, input deleted.
+evict_oldest_donated = functools.partial(
+    jax.jit, static_argnames=("k",), donate_argnums=(0,))(_evict_oldest)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "capacity"))
@@ -250,5 +322,6 @@ def from_fit(X, y, *, k, capacity: int) -> RegStreamState:
                    capacity=int(capacity))
 
 
-__all__ = ["RegStreamState", "init", "state_view", "observe", "evict",
-           "evict_oldest", "from_fit"]
+__all__ = ["RegStreamState", "init", "state_view", "observe",
+           "observe_donated", "evict", "evict_donated", "evict_oldest",
+           "evict_oldest_donated", "from_fit"]

@@ -17,6 +17,8 @@ Usage::
         x_t, y_t = traffic_at(t)            # (64, 16), (64,)
         tau_t = eng.taus(jax.random.PRNGKey(t))
         state, pvals = eng.observe(state, x_t, y_t, tau_t)  # (64,) smoothed
+    # or: T ticks in ONE dispatch (xs: (T, 64, 16), ys/taus: (T, 64))
+    state, pvals = eng.observe_many(state, xs, ys, taus)    # (T, 64)
     sets = eng.predict(state, x_query)      # (64, m, n_labels) full-CP query
 
 Per-session p-values are bit-identical to running that session's stream
@@ -29,6 +31,16 @@ Tenants with no traffic on a tick are masked via ``active`` (state
 bitwise unchanged, NaN p-value) — the micro-batch shape never changes.
 When no ``window`` is set the engine auto-grows: once any session hits
 capacity, every array doubles (host-side, O(log n) retraces total).
+
+Two memory-system optimizations keep the hot tick O(cap) instead of
+O(cap^2) (both bit-neutral, property-tested): the jitted step *donates*
+its input state (``donate_argnums``), so the (S, cap, cap) distance
+matrices update in place instead of being copied per tick — the input
+``state`` is consumed by ``observe``/``observe_many`` and must not be
+reused (pass ``donate=False`` to keep copy semantics) — and
+``observe_many`` runs a whole chunk of ticks under one ``lax.scan``
+dispatch, amortizing the per-dispatch overhead that otherwise dominates
+at high tenant counts (``observe`` is its T=1 case).
 """
 from __future__ import annotations
 
@@ -38,18 +50,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine_utils
 from repro.serving import session as sess_m
 from repro.serving.session import Session
-
-
-def _session_step(sess, x, y, tau, window, active, *, k):
-    def do(s):
-        return sess_m.observe_sliding(s, x, y, tau, window, k=k)
-
-    def skip(s):
-        return s, jnp.asarray(jnp.nan, dtype=s.knn.X.dtype)
-
-    return jax.lax.cond(active, do, skip, sess)
 
 
 class ServingEngine:
@@ -64,11 +67,15 @@ class ServingEngine:
     n_labels:   label alphabet for ``predict``.
     window:     sliding-window length (<= capacity); None => grow mode
                 (capacity doubles when full instead of evicting).
+    donate:     donate the input state to the jitted observe step (the
+                O(cap) in-place path). The state passed to ``observe`` /
+                ``observe_many`` is deleted by the call; reuse raises.
+                ``False`` restores copy semantics (input stays valid).
     """
 
     def __init__(self, *, n_sessions: int, capacity: int, dim: int, k: int,
                  n_labels: int = 2, window: int | None = None,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, donate: bool = True):
         if window is not None and window > capacity:
             raise ValueError(f"window {window} exceeds capacity {capacity}")
         if window is not None and window < 1:
@@ -82,9 +89,23 @@ class ServingEngine:
         self.n_labels = n_labels
         self.window = window
         self.dtype = dtype
-        step = functools.partial(_session_step, k=k)
-        self._step = jax.jit(
-            jax.vmap(step, in_axes=(0, 0, 0, 0, 0, 0)))
+        self.donate = donate
+        # the fused sliding step: evict-if-full + observe + active mask
+        # in one pass (no cond/select on the (cap, cap) leaves); grow
+        # mode (window=None) statically drops the eviction machinery.
+        # A sliding window statically bounds occupancy, so the tick runs
+        # on the [:window] block of every leaf (cost scales with the
+        # window, not the padded capacity) — observe_many verifies the
+        # n <= window invariant once per externally supplied state.
+        wmax = None if window is None else max(min(window, capacity), k)
+        step = functools.partial(sess_m._sliding_step, k=k,
+                                 evictable=window is not None, wmax=wmax)
+        self._wmax = wmax
+        self._w_checked = False
+        vstep = jax.vmap(step, in_axes=(0, 0, 0, 0, 0, 0))
+        self._step_many = jax.jit(
+            engine_utils.scan_chunk(vstep),
+            donate_argnums=(0,) if donate else ())
         self._predict = jax.jit(jax.vmap(functools.partial(
             sess_m.predict_pvalues, k=k, n_labels=n_labels)))
         # host-side upper bound on max_s n_s, for grow-mode occupancy
@@ -118,30 +139,43 @@ class ServingEngine:
         bool (default all). Returns (state, pvalues (S,)) — NaN p-value on
         inactive slots. In grow mode, auto-doubles capacity first if any
         session is full (host-side sync + retrace, O(log n) times total).
+        The T=1 case of ``observe_many`` (bit-identical, tested); with
+        ``donate=True`` (default) the input ``state`` is consumed.
         """
         if active is None:
             active = jnp.ones((self.n_sessions,), dtype=bool)
-        if self.window is None:
-            # n grows by at most 1 per tick, so a host counter upper-bounds
-            # occupancy; the true max is synced only at startup and when
-            # the bound reaches capacity (after external state swaps, call
-            # reset_occupancy to re-sync).
-            cap = state.capacity
-            if self._n_bound is None or self._n_bound >= cap:
-                self._n_bound = int(jnp.max(state.knn.n))
-                while self._n_bound >= cap:
-                    state = self.grow(state)
-                    cap = state.capacity
-            self._n_bound += 1
-        return self._step(state, x, y.astype(jnp.int32),
-                          tau.astype(self.dtype), self._windows(state),
-                          active)
+        state, p = self.observe_many(
+            state, x[None], y[None], tau[None], active[None])
+        return state, p[0]
+
+    def observe_many(self, state: Session, xs, ys, taus, active=None):
+        """A chunk of T micro-batched ticks in ONE jitted dispatch.
+
+        xs: (T, S, dim); ys: (T, S); taus: (T, S); active: (T, S) bool
+        (default all). Returns (state, pvalues (T, S)) — tick t's row is
+        bit-identical to calling ``observe`` T times (the chunk is a
+        ``lax.scan`` over the same per-tick step; property-tested). In
+        grow mode the whole chunk's worst-case occupancy is provisioned
+        up front (capacity doubles until ``n + T <= cap``), so the scan
+        never needs a mid-chunk host sync. With ``donate=True`` the
+        input ``state`` is consumed.
+        """
+        if active is None:
+            active = jnp.ones(xs.shape[:2], dtype=bool)
+        state = engine_utils.ensure_room(self, state, xs.shape[0],
+                                         lambda s: s.knn.n)
+        engine_utils.check_window_occupancy(self, state, lambda s: s.knn.n)
+        return self._step_many(state, xs, ys.astype(jnp.int32),
+                               taus.astype(self.dtype),
+                               self._windows(state), active)
 
     def reset_occupancy(self) -> None:
-        """Forget the host-side occupancy bound (grow mode); the next
-        ``observe`` re-syncs it from device. Call after substituting a
-        state that this engine did not produce."""
+        """Forget the host-side occupancy bound (grow mode) and the
+        window-invariant check; the next ``observe`` re-syncs/re-checks
+        from device. Call after substituting a state that this engine
+        did not produce."""
         self._n_bound = None
+        self._w_checked = False
 
     def grow(self, state: Session, factor: int = 2) -> Session:
         """Double every session's capacity (host-side, preserves state).

@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import online
-from repro.core.online import BIG, OnlineKnnState
+from repro.core.online import BIG, OnlineKnnState, cshift
 from repro.kernels import ops as kops
 
 
@@ -72,14 +72,14 @@ def init(capacity: int, p: int, k: int, dtype=jnp.float32) -> Session:
     )
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def observe(sess: Session, x_new, y_new, tau, *, k):
+def _observe(sess: Session, x_new, y_new, tau, *, k):
     """Smoothed p-value for (x_new, y_new), then learn it — one O(cap) step.
 
     The p-value is bit-identical to ``core.online.observe`` (it *is* that
     computation); additionally the new point's distance row/column is
-    recorded in ``D`` for later exact eviction. Precondition: n < capacity
-    (callers grow or evict first).
+    recorded in ``D`` for later exact eviction — two dynamic-update-slices
+    that run in place (O(cap) traffic) when the jitted step donates its
+    input. Precondition: n < capacity (callers grow or evict first).
     """
     idx = sess.knn.n
     knn, p, d = online.observe_with_dists(sess.knn, x_new, y_new, tau, k=k)
@@ -87,15 +87,33 @@ def observe(sess: Session, x_new, y_new, tau, *, k):
     return Session(knn, D), p
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def evict_oldest(sess: Session, *, k) -> Session:
+observe = functools.partial(jax.jit, static_argnames=("k",))(_observe)
+#: Donating form of ``observe``: the (cap, cap) ``D`` row/column insert
+#: updates in place instead of copying the matrix. The input session is
+#: DELETED by the call — reusing it afterwards raises ``RuntimeError:
+#: Array has been deleted``. Numerics are identical to ``observe``.
+observe_donated = functools.partial(
+    jax.jit, static_argnames=("k",), donate_argnums=(0,))(_observe)
+
+
+def _evict_oldest(sess: Session, *, k) -> Session:
     """Exact decremental update: forget the oldest live point.
 
     Paper's decremental rule: only points whose same-label k-neighbourhood
-    contained the evicted point are affected; each backfills from the
-    (k+1)-th best — here recovered from the maintained ``D``, so the
-    result is bit-exact vs. refitting on the remaining window. Rows are
-    compacted down by one to keep the arrival-order invariant.
+    contained the evicted point are affected, and each such list needs
+    exactly one repair — drop the evicted entry and backfill the new k-th
+    best. The evicted point is the OLDEST (lowest arrival index), so on
+    distance ties it sorts first: if it is in a list at all, it occupies
+    the *first* slot holding its distance — an O(k) surgery, no re-sort.
+    The backfill value is recovered from the maintained ``D`` by multiset
+    rank: the k-1 surviving list entries hold every remaining candidate
+    value below their max t' (plus ``m'`` occurrences of t' itself), so
+    the next-best value is t' again if the window holds more than m'
+    occurrences of it, else the smallest stored distance above t'. Two
+    cheap masked row reductions (a count and a min) replace the old
+    top_k over the full (cap, cap) matrix — same bits (every output is a
+    stored value), a fraction of the compute. Rows are compacted down by
+    one to keep the arrival-order invariant.
     Precondition: n >= 1 (guarded by callers; under vmap+select the n=0
     lanes compute garbage that the caller's select discards).
     """
@@ -104,9 +122,9 @@ def evict_oldest(sess: Session, *, k) -> Session:
     live = jnp.arange(cap) < knn.n
 
     # which survivors held the evicted point in their k-best list?
-    # d(i, evicted) <= kth  <=>  it is among i's k smallest same-label
-    # distances (tie-robust: removing any one occurrence of a tied value
-    # leaves the same remaining multiset, and we recompute from D).
+    # d(i, evicted) <= kth <=> it is among i's k smallest same-label
+    # distances (exact on ties: the evicted point's index is the lowest,
+    # so it precedes every equal distance in the list order)
     dcol = sess.D[:, 0]
     kth = knn.best[:, -1]
     affected = (knn.y == knn.y[0]) & live & (dcol <= kth)
@@ -122,33 +140,132 @@ def evict_oldest(sess: Session, *, k) -> Session:
     Ds = jnp.concatenate(
         [Ds[:, 1:], jnp.full_like(Ds[:, :1], BIG)], axis=1)
     aff = shift(affected, False)
+    es = shift(dcol, BIG)  # each survivor's distance to the evicted point
 
-    # backfill affected rows: exact k-best over the remaining window,
-    # straight from the stored distances (inert/diagonal entries are BIG)
     n2 = knn.n - 1
     live2 = jnp.arange(cap) < n2
-    Dm = jnp.where(
-        (ys[:, None] == ys[None, :]) & live2[None, :], Ds, BIG)
-    rec = jnp.sort(-jax.lax.top_k(-Dm, k)[0], axis=1)
-    best2 = jnp.where(aff[:, None], rec, bests)
+    cand = (ys[:, None] == ys[None, :]) & live2[None, :]
+    best2 = _drop_backfill(bests, es, cand, Ds, aff, k=k)
     return Session(OnlineKnnState(Xs, ys, best2, n2), Ds)
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def observe_sliding(sess: Session, x_new, y_new, tau, window, *, k):
+def _drop_backfill(L, es, cand, Ds, aff, *, k):
+    """Repair each row flagged in ``aff``: drop the first list slot
+    holding that row's evicted distance ``es`` and backfill the new k-th
+    best by multiset rank over the stored distances (``Ds`` masked by the
+    ``cand`` candidate mask; see ``core.online.drop_backfill_core``).
+    Rows not flagged pass through untouched.
+    """
+    newL, *_ = online.drop_backfill_core(L, es, cand, Ds, k=k)
+    return jnp.where(aff[:, None], newL, L)
+
+
+evict_oldest = functools.partial(
+    jax.jit, static_argnames=("k",))(_evict_oldest)
+#: Donating form of ``evict_oldest`` — same numerics, input deleted.
+evict_oldest_donated = functools.partial(
+    jax.jit, static_argnames=("k",), donate_argnums=(0,))(_evict_oldest)
+
+
+def _sliding_step(sess: Session, x_new, y_new, tau, window, active, *, k,
+                  evictable: bool = True, wmax: int | None = None):
+    """One fused sliding-window tick: evict-if-full, observe, all gated.
+
+    The semantics of ``cond(evict_oldest) -> observe`` with an outer
+    ``active`` mask, restructured so the (cap, cap) distance matrix
+    moves ONCE per tick instead of three times (evict-branch shift +
+    skip-branch passthrough + cond select): the compaction is a single
+    per-lane *conditional shift* — a padded dynamic slice at offset
+    s ∈ {0, 1} — followed by the shared observe core, whose state writes
+    are gated arithmetically (inactive lanes rewrite their current
+    values, so masked state stays bitwise unchanged and the p-value is
+    NaN). Bit-identical to the unfused form (tested).
+
+    ``evictable=False`` (static) removes the compaction entirely — the
+    grow-mode engines never evict, so their tick is a pure donated
+    observe. ``wmax`` (static) is the caller's promise that occupancy
+    never exceeds it (a sliding engine's window bounds n): the whole
+    tick then runs on the ``[:wmax]`` block of every leaf and splices
+    the result back in place, so per-tick cost scales with the *window*,
+    not the padded capacity.
+    """
+    knn = sess.knn
+    cap = knn.X.shape[0]
+    if wmax is not None and wmax < cap:
+        sub = Session(
+            OnlineKnnState(knn.X[:wmax], knn.y[:wmax], knn.best[:wmax],
+                           knn.n),
+            sess.D[:wmax, :wmax])
+        sub2, p = _sliding_step(sub, x_new, y_new, tau, window, active,
+                                k=k, evictable=evictable)
+        return Session(
+            OnlineKnnState(
+                X=knn.X.at[:wmax].set(sub2.knn.X),
+                y=knn.y.at[:wmax].set(sub2.knn.y),
+                best=knn.best.at[:wmax].set(sub2.knn.best),
+                n=sub2.knn.n,
+            ),
+            D=sess.D.at[:wmax, :wmax].set(sub2.D)), p
+    act = jnp.asarray(active)
+    if evictable:
+        ev = act & (knn.n >= window)
+        s = ev.astype(jnp.int32)
+        live = jnp.arange(cap) < knn.n
+        dcol = sess.D[:, 0]
+        affected = (ev & (knn.y == knn.y[0]) & live
+                    & (dcol <= knn.best[:, -1]))
+
+        # conditional compaction: pad each leaf by one (the pad value IS
+        # the compaction fill) and take one dynamic slice at offset
+        # s ∈ {0, 1} — identity when s == 0, shift-with-fill when s == 1
+        X1 = cshift(knn.X, s, 0)
+        y1 = cshift(knn.y, s, -1)
+        L1 = cshift(knn.best, s, BIG)
+        Dp = jnp.pad(sess.D, ((0, 1), (0, 1)), constant_values=BIG)
+        D1 = jax.lax.dynamic_slice(Dp, (s, s), (cap, cap))
+        aff1 = cshift(affected, s, False)
+        es1 = cshift(dcol, s, BIG)
+        n1 = knn.n - s
+        live1 = jnp.arange(cap) < n1
+        cand = (y1[:, None] == y1[None, :]) & live1[None, :]
+        best1 = _drop_backfill(L1, es1, cand, D1, aff1, k=k)
+    else:
+        X1, y1, best1, D1, n1 = knn.X, knn.y, knn.best, sess.D, knn.n
+
+    # price + learn through the same code path as core.online.run_stream
+    knn1 = OnlineKnnState(X1, y1, best1, n1)
+    knn2, p, d = online.observe_with_dists(knn1, x_new, y_new, tau, k=k)
+
+    # gate on ``active``: the big leaf (D) is written with its own
+    # current values on inactive lanes (D is symmetric, so the row at
+    # idx equals the column at idx); the small leaves are selects
+    idx = n1
+    row = jnp.where(act, d, D1[idx, :])
+    D2 = D1.at[idx, :].set(row).at[:, idx].set(row)
+    knn3 = OnlineKnnState(
+        X=jnp.where(act, knn2.X, X1),
+        y=jnp.where(act, knn2.y, y1),
+        best=jnp.where(act, knn2.best, best1),
+        n=jnp.where(act, knn2.n, n1),
+    )
+    p = jnp.where(act, p, jnp.asarray(jnp.nan, dtype=X1.dtype))
+    return Session(knn3, D2), p
+
+
+def _observe_sliding(sess: Session, x_new, y_new, tau, window, *, k):
     """Evict-if-full then observe: one fixed-shape sliding-window step.
 
-    ``window`` is a traced scalar (per-tenant window sizes never retrace).
-    Under vmap the conds lower to selects — both branches run, lanes that
-    don't evict keep their state bitwise unchanged.
+    ``window`` is a traced scalar (per-tenant window sizes never
+    retrace). The fused ``_sliding_step`` with every lane active.
     """
-    sess = jax.lax.cond(
-        sess.knn.n >= window,
-        lambda s: evict_oldest(s, k=k),
-        lambda s: s,
-        sess,
-    )
-    return observe(sess, x_new, y_new, tau, k=k)
+    return _sliding_step(sess, x_new, y_new, tau, window, True, k=k)
+
+
+observe_sliding = functools.partial(
+    jax.jit, static_argnames=("k",))(_observe_sliding)
+#: Donating form of ``observe_sliding`` — same numerics, input deleted.
+observe_sliding_donated = functools.partial(
+    jax.jit, static_argnames=("k",), donate_argnums=(0,))(_observe_sliding)
 
 
 def grow(sess: Session, factor: int = 2) -> Session:
@@ -215,5 +332,6 @@ def predict_pvalues(sess: Session, X_test, *, k, n_labels):
     return (counts + 1.0) / (knn.n + 1.0)
 
 
-__all__ = ["Session", "init", "observe", "evict_oldest", "observe_sliding",
-           "grow", "predict_pvalues"]
+__all__ = ["Session", "init", "observe", "observe_donated", "evict_oldest",
+           "evict_oldest_donated", "observe_sliding",
+           "observe_sliding_donated", "grow", "predict_pvalues"]

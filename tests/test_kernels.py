@@ -12,6 +12,7 @@ from repro.kernels.interval_sweep import interval_sweep as iv_pallas
 from repro.kernels.kde_score import kde_rowsums as kde_pallas
 from repro.kernels.pairwise_dist import pairwise_sq_dists
 from repro.kernels.flash_attention import flash_attention as fa_pallas
+from repro.kernels.stream_update import stream_update as su_pallas
 
 
 @pytest.mark.parametrize("m,n,p", [(8, 8, 4), (65, 33, 7), (128, 256, 30),
@@ -89,6 +90,81 @@ def test_interval_sweep_matches_ref(n, m, k, dead_tail):
         f = np.isfinite(want)
         np.testing.assert_array_equal(got[~f], want[~f])  # +-inf pattern
         np.testing.assert_allclose(got[f], want[f], atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("cap,p,k,n", [(64, 5, 5, 40), (70, 6, 1, 70),
+                                       (300, 16, 7, 123), (32, 3, 4, 0)])
+@pytest.mark.parametrize("mode", ["class", "reg"])
+def test_stream_update_matches_ref(cap, p, k, n, mode):
+    """Fused distance row + gated ordered k-best merge vs oracle.
+
+    Covers non-tile-aligned capacities, k=1, an empty window (n=0, all
+    rows inert) and both gate modes."""
+    ks = jax.random.split(jax.random.PRNGKey(cap + k), 6)
+    X = jax.random.normal(ks[0], (cap, p), jnp.float32)
+    y = jax.random.randint(ks[1], (cap,), 0, 3, jnp.int32)
+    nbr_d = jnp.sort(
+        jax.random.uniform(ks[2], (cap, k), jnp.float32, 0.1, 3.0), axis=1)
+    nbr_y = jax.random.normal(ks[3], (cap, k), jnp.float32)
+    x_new = jax.random.normal(ks[4], (p,), jnp.float32)
+    if mode == "class":
+        y_in, y_new = y, jnp.int32(1)
+    else:
+        y_in, y_new = jax.random.normal(ks[5], (cap,), jnp.float32), \
+            jnp.float32(0.25)
+    nn = jnp.int32(n)
+    got = su_pallas(X, y_in, nbr_d, nbr_y, x_new, y_new, nn, mode=mode,
+                    block_n=64, interpret=True)
+    want = ref.stream_update(X, y_in, nbr_d, nbr_y, x_new, y_new, nn,
+                             mode=mode)
+    for g, w, name in zip(got, want, ["d_row", "nbr_d", "nbr_y"]):
+        g, w = np.asarray(g), np.asarray(w)
+        assert g.shape == w.shape, name
+        big = w >= 1e29
+        np.testing.assert_array_equal(g[big], w[big], err_msg=name)
+        np.testing.assert_allclose(g[~big], w[~big], atol=1e-5, rtol=1e-5,
+                                   err_msg=name)
+    # the sortless CPU production path is bit-identical to the oracle
+    fast = ref.stream_update_fast(X, y_in, nbr_d, nbr_y, x_new, y_new, nn,
+                                  mode=mode)
+    for f, w, name in zip(fast, want, ["d_row", "nbr_d", "nbr_y"]):
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(w),
+                                      err_msg="fast " + name)
+
+
+@pytest.mark.parametrize("mode", ["class", "reg"])
+def test_stream_update_tie_rule_exact(mode):
+    """Distance ties: the kernel's branch-free insert-after-equals must
+    reproduce the oracle's stable-sort tie rule bit-for-bit.
+
+    One-hot rows at distance exactly 1.0 from the zero query, neighbour
+    lists stuffed with exact 1.0 entries — every value in play is exact
+    in f32, so the comparison is equality, not allclose."""
+    cap, p, k, n = 16, 8, 3, 12
+    X = jnp.eye(cap, p, dtype=jnp.float32)  # d(x_new=0, X_i) == 1.0 exactly
+    x_new = jnp.zeros((p,), jnp.float32)
+    # lists already containing the candidate distance (and BIG padding)
+    base = jnp.asarray([0.5, 1.0, 1.0], jnp.float32)
+    nbr_d = jnp.tile(base, (cap, 1))
+    nbr_d = nbr_d.at[5].set(jnp.asarray([1.0, 1.0, 2.0], jnp.float32))
+    nbr_d = nbr_d.at[6].set(jnp.asarray([0.25, 0.5, 1e30], jnp.float32))
+    nbr_y = jnp.arange(cap * k, dtype=jnp.float32).reshape(cap, k)
+    if mode == "class":
+        y, y_new = jnp.zeros((cap,), jnp.int32), jnp.int32(0)
+    else:
+        y, y_new = jnp.linspace(-1.0, 1.0, cap).astype(jnp.float32), \
+            jnp.float32(9.0)
+    got = su_pallas(X, y, nbr_d, nbr_y, x_new, y_new, jnp.int32(n),
+                    mode=mode, block_n=8, interpret=True)
+    want = ref.stream_update(X, y, nbr_d, nbr_y, x_new, y_new,
+                             jnp.int32(n), mode=mode)
+    fast = ref.stream_update_fast(X, y, nbr_d, nbr_y, x_new, y_new,
+                                  jnp.int32(n), mode=mode)
+    for g, f, w, name in zip(got, fast, want, ["d_row", "nbr_d", "nbr_y"]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(w),
+                                      err_msg="fast " + name)
 
 
 @pytest.mark.parametrize("cfg", [

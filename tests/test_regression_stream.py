@@ -151,6 +151,21 @@ def test_evict_arbitrary_index_bit_exact_vs_refit(seed, k, i):
     _assert_state_matches_fit(state, X[keep], y[keep], k)
 
 
+@pytest.mark.parametrize("seed,k", [(0, 3), (1, 1), (2, 5)])
+def test_evict_oldest_tie_heavy_bit_exact(seed, k):
+    """Integer-grid features force many exactly-equal distances: the
+    O(k)-surgery evict_oldest must reproduce fit's ties-toward-lower-
+    index order (distances AND labels) bit-for-bit."""
+    T = 24
+    rng = np.random.RandomState(seed)
+    X = rng.randint(0, 3, size=(T, DIM)).astype(np.float32)
+    y = rng.randint(0, 4, size=T).astype(np.float32)
+    state = _fill(rstream.init(32, DIM, k), X, y, k)
+    for e in range(T - k - 1):
+        state = rstream.evict_oldest(state, k=k)
+        _assert_state_matches_fit(state, X[e + 1:], y[e + 1:], k)
+
+
 def test_sliding_window_equals_refit_each_window():
     T, cap, w, k = 40, 64, 12, 5
     X, y = _data(T, seed=4)
@@ -285,6 +300,115 @@ def test_engine_grow_mode_doubles_and_stays_exact():
         want = np.asarray(reg.intervals_optimized(fit, Xt, k=k,
                                                   epsilon=EPS))
         assert iv[s].tobytes() == want.tobytes()
+
+
+if HAS_HYPOTHESIS:
+    _chunk_cases = lambda f: settings(max_examples=8, deadline=None)(
+        given(seed=st.integers(0, 10_000), k=st.integers(1, 6),
+              cut=st.integers(0, 24))(f))
+else:
+    _chunk_cases = pytest.mark.parametrize(
+        "seed,k,cut", [(0, 4, 0), (1, 1, 24), (2, 6, 7), (3, 3, 13)])
+
+
+@_chunk_cases
+def test_observe_many_chunking_bit_identical_to_per_tick(seed, k, cut):
+    """Any split of the tick stream into observe_many chunks (donated)
+    == the per-tick undonated path, bitwise, states included."""
+    S, T, cap, w = 3, 24, 32, 10
+    streams = [_data(T, seed + 31 * s) for s in range(S)]
+    xs = jnp.stack([jnp.stack([jnp.asarray(st_[0][t]) for st_ in streams])
+                    for t in range(T)])
+    ys = jnp.stack([jnp.stack([jnp.asarray(st_[1][t]) for st_ in streams])
+                    for t in range(T)])
+    taus = jax.random.uniform(jax.random.PRNGKey(seed), (T, S),
+                              dtype=jnp.float32)
+    kw = dict(n_sessions=S, capacity=cap, dim=DIM, k=k, window=w)
+    ref_eng = RegressionServingEngine(**kw, donate=False)
+    st_ref = ref_eng.init_state()
+    want = np.zeros((T, S), np.float32)
+    for t in range(T):
+        st_ref, p = ref_eng.observe(st_ref, xs[t], ys[t], taus[t])
+        want[t] = np.asarray(p)
+
+    eng = RegressionServingEngine(**kw)  # donate=True default
+    state = eng.init_state()
+    got = []
+    for lo, hi in [(0, cut), (cut, T)]:
+        if hi > lo:
+            state, p = eng.observe_many(state, xs[lo:hi], ys[lo:hi],
+                                        taus[lo:hi])
+            got.append(np.asarray(p))
+    np.testing.assert_array_equal(np.concatenate(got, axis=0), want)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(st_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_observe_many_grow_mode_provisions_whole_chunk():
+    S, T, k = 2, 20, 5
+    streams = [_data(T, seed=310 + s) for s in range(S)]
+    xs = jnp.stack([jnp.stack([jnp.asarray(st_[0][t]) for st_ in streams])
+                    for t in range(T)])
+    ys = jnp.stack([jnp.stack([jnp.asarray(st_[1][t]) for st_ in streams])
+                    for t in range(T)])
+    taus = jax.random.uniform(jax.random.PRNGKey(7), (T, S), jnp.float32)
+    eng = RegressionServingEngine(n_sessions=S, capacity=8, dim=DIM, k=k)
+    state, pvals = eng.observe_many(eng.init_state(), xs, ys, taus)
+    assert state.capacity == 32  # provisioned for all 20 ticks up front
+    assert eng.capacity == 32
+    assert np.isfinite(np.asarray(pvals)).all()
+    Xt = jnp.asarray(_data(3, 997)[0])
+    iv = np.asarray(eng.intervals(state, Xt, epsilon=EPS))
+    for s, (X, y) in enumerate(streams):
+        fit = reg.fit(jnp.asarray(X), jnp.asarray(y), k=k)
+        want = np.asarray(reg.intervals_optimized(fit, Xt, k=k,
+                                                  epsilon=EPS))
+        assert iv[s].tobytes() == want.tobytes()
+
+
+def test_donated_stream_step_matches_undonated_and_consumes():
+    """stream.observe_donated / evict_donated: same bits as the
+    undonated forms; the pre-donation state is dead afterwards."""
+    T, k = 20, 4
+    X, y = _data(T, seed=11)
+    a = rstream.init(32, DIM, k)
+    b = rstream.init(32, DIM, k)
+    for t in range(T):
+        prev = a
+        a, da = rstream.observe_donated(
+            a, jnp.asarray(X[t]), jnp.asarray(y[t]), k=k)
+        b, db = rstream.observe(
+            b, jnp.asarray(X[t]), jnp.asarray(y[t]), k=k)
+        np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
+    a = rstream.evict_donated(a, 3, k=k)
+    b = rstream.evict(b, 3, k=k)
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    _assert_state_matches_fit(
+        a, np.delete(X, 3, axis=0), np.delete(y, 3, axis=0), k)
+    with pytest.raises(RuntimeError, match="deleted"):
+        np.asarray(prev.D)
+
+
+def test_regression_engine_dtype_stable_across_grow():
+    S, k, dtype = 2, 3, jnp.bfloat16
+    eng = RegressionServingEngine(n_sessions=S, capacity=8, dim=DIM, k=k,
+                                  dtype=dtype)
+    assert eng.taus(jax.random.PRNGKey(0)).dtype == dtype
+    state = eng.init_state()
+    X, y = _data(20, seed=13)
+    for t in range(20):  # forces growth past capacity 8
+        state, p = eng.observe(
+            state, jnp.stack([jnp.asarray(X[t])] * S).astype(dtype),
+            jnp.stack([jnp.asarray(y[t])] * S).astype(dtype),
+            eng.taus(jax.random.PRNGKey(t)))
+    assert state.capacity > 8
+    assert p.dtype == dtype
+    for leaf in (state.X, state.y, state.D, state.nbr_d, state.nbr_y):
+        assert leaf.dtype == dtype
+    assert eng.taus(jax.random.PRNGKey(9)).dtype == dtype
 
 
 def test_engine_active_masking_freezes_inactive_slots():

@@ -79,6 +79,25 @@ def test_evict_plus_readd_equals_fit_from_scratch(seed, evictions):
     assert float(pa) == float(pb)
 
 
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_evict_oldest_tie_heavy_bit_exact(seed):
+    """Binary-grid features force many exactly-equal distances: the
+    O(k)-surgery evict_oldest must match fit-from-scratch bitwise."""
+    T = 22
+    rng = np.random.RandomState(seed)
+    X = jnp.asarray(rng.randint(0, 2, size=(T, DIM)), jnp.float32)
+    y = jnp.asarray(rng.randint(0, 2, size=T), jnp.int32)
+    taus = jnp.full((T,), 0.5, jnp.float32)
+    sess, _ = _fill(sm.init(32, DIM, K), X, y, taus)
+    for e in range(T - K - 1):
+        sess = sm.evict_oldest(sess, k=K)
+        scratch, _ = _fill(sm.init(32, DIM, K), X, y, taus, lo=e + 1)
+        np.testing.assert_array_equal(np.asarray(sess.knn.best),
+                                      np.asarray(scratch.knn.best))
+        np.testing.assert_array_equal(np.asarray(sess.knn.X),
+                                      np.asarray(scratch.knn.X))
+
+
 def test_sliding_window_equals_refit_each_window():
     T, cap, w = 40, 64, 12
     X, y, taus = _stream(T, seed=4)
@@ -363,6 +382,160 @@ def test_engine_grow_keeps_meta_capacity_in_sync():
     assert eng.init_state().capacity == state.capacity
     with pytest.raises(ValueError, match="capacity"):
         ServingEngine(n_sessions=1, capacity=K - 1, dim=DIM, k=K)
+
+
+# ---------------------------------------------------------------------------
+# observe_many chunking + buffer donation
+# ---------------------------------------------------------------------------
+
+
+def _batched_stream(S, T, base_seed):
+    streams = [_stream(T, seed=base_seed + s) for s in range(S)]
+    xs = jnp.stack([jnp.stack([st[0][t] for st in streams])
+                    for t in range(T)])  # (T, S, dim)
+    ys = jnp.stack([jnp.stack([st[1][t] for st in streams])
+                    for t in range(T)])
+    taus = jnp.stack([jnp.stack([st[2][t] for st in streams])
+                      for t in range(T)])
+    return streams, xs, ys, taus
+
+
+@pytest.mark.parametrize("chunks", [(24,), (1,) * 24, (5, 18, 1),
+                                    (2, 22)])
+def test_observe_many_bit_identical_to_per_tick(chunks):
+    """Any chunking of the tick stream == the per-tick path, bitwise."""
+    S, T, cap, w = 3, 24, 32, 10
+    assert sum(chunks) == T
+    streams, xs, ys, taus = _batched_stream(S, T, base_seed=600)
+    kw = dict(n_sessions=S, capacity=cap, dim=DIM, k=K, n_labels=2,
+              window=w)
+    ref_eng = ServingEngine(**kw, donate=False)
+    st_ref = ref_eng.init_state()
+    want = np.zeros((T, S), np.float32)
+    for t in range(T):
+        st_ref, p = ref_eng.observe(st_ref, xs[t], ys[t], taus[t])
+        want[t] = np.asarray(p)
+
+    eng = ServingEngine(**kw)  # donate=True default
+    st = eng.init_state()
+    got = []
+    off = 0
+    for c in chunks:
+        st, p = eng.observe_many(st, xs[off:off + c], ys[off:off + c],
+                                 taus[off:off + c])
+        got.append(np.asarray(p))
+        off += c
+    np.testing.assert_array_equal(np.concatenate(got, axis=0), want)
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(st_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_observe_many_grow_mode_provisions_whole_chunk():
+    """Grow mode doubles capacity up front so one dispatch covers T."""
+    S, T = 2, 20
+    streams, xs, ys, taus = _batched_stream(S, T, base_seed=620)
+    eng = ServingEngine(n_sessions=S, capacity=8, dim=DIM, k=K, n_labels=2)
+    state, pvals = eng.observe_many(eng.init_state(), xs, ys, taus)
+    assert state.capacity == 32  # 8 -> 16 -> 32 before the scan
+    assert eng.capacity == 32
+    for s, (X, y, _) in enumerate(streams):
+        want, _ = online.run_stream(X, y, k=K,
+                                    key=jax.random.PRNGKey(620 + s),
+                                    capacity=T)
+        np.testing.assert_array_equal(np.asarray(want),
+                                      np.asarray(pvals)[:, s])
+
+
+def test_observe_many_active_mask_per_tick():
+    S, T = 2, 4
+    _, xs, ys, taus = _batched_stream(S, T, base_seed=640)
+    eng = ServingEngine(n_sessions=S, capacity=16, dim=DIM, k=K,
+                        n_labels=2, window=16)
+    active = jnp.asarray([[True, False]] * 2 + [[True, True]] * 2)
+    state, p = eng.observe_many(eng.init_state(), xs, ys, taus,
+                                active=active)
+    p = np.asarray(p)
+    assert np.isnan(p[:2, 1]).all() and not np.isnan(p[:, 0]).any()
+    assert not np.isnan(p[2:, 1]).any()
+    assert list(np.asarray(state.knn.n)) == [4, 2]
+
+
+def test_donated_observe_matches_undonated_and_consumes_input():
+    """Donation is numerically free, and the donated input is dead:
+    reusing a pre-donation state raises instead of silently aliasing."""
+    S, T, cap, w = 2, 10, 16, 8
+    _, xs, ys, taus = _batched_stream(S, T, base_seed=660)
+    eng_d = ServingEngine(n_sessions=S, capacity=cap, dim=DIM, k=K,
+                          n_labels=2, window=w, donate=True)
+    eng_u = ServingEngine(n_sessions=S, capacity=cap, dim=DIM, k=K,
+                          n_labels=2, window=w, donate=False)
+    st_d, st_u = eng_d.init_state(), eng_u.init_state()
+    for t in range(T):
+        prev_d = st_d
+        st_d, pd = eng_d.observe(st_d, xs[t], ys[t], taus[t])
+        st_u, pu = eng_u.observe(st_u, xs[t], ys[t], taus[t])
+        np.testing.assert_array_equal(np.asarray(pd), np.asarray(pu))
+    for a, b in zip(jax.tree_util.tree_leaves(st_d),
+                    jax.tree_util.tree_leaves(st_u)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # undonated inputs stay alive ...
+    assert np.asarray(st_u.D).shape == (S, cap, cap)
+    # ... donated inputs are deleted; both direct reads and a second
+    # observe on the stale state fail loudly
+    with pytest.raises(RuntimeError, match="deleted"):
+        np.asarray(prev_d.D)
+    with pytest.raises((RuntimeError, ValueError), match="deleted"):
+        eng_d.observe(prev_d, xs[0], ys[0], taus[0])
+
+
+def test_session_donated_step_matches_and_consumes():
+    T = 12
+    X, y, taus = _stream(T, seed=680)
+    a = sm.init(32, DIM, K)
+    b = sm.init(32, DIM, K)
+    for t in range(T):
+        prev = a
+        a, pa = sm.observe_sliding_donated(a, X[t], y[t], taus[t],
+                                           jnp.int32(8), k=K)
+        b, pb = sm.observe_sliding(b, X[t], y[t], taus[t],
+                                   jnp.int32(8), k=K)
+        assert float(pa) == float(pb)
+    np.testing.assert_array_equal(np.asarray(a.knn.best),
+                                  np.asarray(b.knn.best))
+    np.testing.assert_array_equal(np.asarray(a.D), np.asarray(b.D))
+    with pytest.raises(RuntimeError, match="deleted"):
+        np.asarray(prev.D)
+
+
+# ---------------------------------------------------------------------------
+# dtype stability across grow (post-grow re-jit audit)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_engine_dtype_stable_across_grow(dtype):
+    """Every state leaf, the p-values and ``taus`` keep the engine dtype
+    through grow-mode capacity doubling (sub-f32 dtypes used to drift to
+    f32 through the p-value's int promotion, breaking the masked cond)."""
+    S = 2
+    eng = ServingEngine(n_sessions=S, capacity=8, dim=DIM, k=K,
+                        n_labels=2, dtype=dtype)
+    tau = eng.taus(jax.random.PRNGKey(0))
+    assert tau.dtype == dtype
+    state = eng.init_state()
+    X, y, _ = _stream(20, seed=700)
+    for t in range(20):  # forces 8 -> 16 -> 32 growth
+        state, p = eng.observe(
+            state, jnp.stack([X[t]] * S).astype(dtype),
+            jnp.stack([y[t]] * S), eng.taus(jax.random.PRNGKey(t)))
+    assert state.capacity > 8
+    assert p.dtype == dtype
+    assert state.knn.X.dtype == dtype
+    assert state.knn.best.dtype == dtype
+    assert state.D.dtype == dtype
+    assert state.knn.y.dtype == jnp.int32
+    assert eng.taus(jax.random.PRNGKey(9)).dtype == dtype
 
 
 def test_registry_custom_measure_plugs_in():
