@@ -12,7 +12,7 @@ import argparse
 import sys
 import time
 
-from benchmarks.common import HEADER
+from benchmarks.common import HEADER, row
 
 
 def main(argv=None) -> int:
@@ -38,8 +38,14 @@ def main(argv=None) -> int:
             m_test=8 if args.quick else table2_highdim.M_TEST),
         "table3": lambda: table3_parallel.run(
             n=256 if args.quick else table3_parallel.N),
-        "bootstrap": lambda: bootstrap_bench.run(
-            n=24 if args.quick else 48),
+        "bootstrap": lambda: [
+            row(f"bootstrap/{k}", f"n={r['n']},B={r['B']}", r[k],
+                f"B'={r['b_prime']} "
+                f"speedup={r['speedup_optimized_vs_standard']:.1f}x")
+            for r in bootstrap_bench.run(
+                n_grid=(24,) if args.quick else (48,), m=1, B=5, depth=3)
+            for k in ("t_fit_s", "t_optimized_per_point_s",
+                      "t_standard_per_point_s", "t_tick_s")],
         "online": lambda: online_bench.run(
             t_grid=(64,) if args.quick else (64, 256, 1024)),
         "roofline": lambda: roofline.run(mesh_filter=None),

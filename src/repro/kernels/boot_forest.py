@@ -1,0 +1,111 @@
+"""Vectorized extra-tree ensemble for the bootstrap CP measure (Section 6).
+
+The bootstrap machinery trains hundreds of small trees per p-value; the
+seed implementation looped Python ``fit_tree`` calls over numpy. Here the
+whole ensemble is three stacked ``(S, n_nodes)`` arrays — split feature
+(``-1`` = leaf), threshold, majority label — fitted by one vmapped jitted
+dispatch. Training sets are expressed as **multiplicity weights** over a
+shared row matrix (a bootstrap sample of ``X`` is just an integer count
+vector), so every tree in a batch shares one ``(m, p)`` operand and the
+node loop vectorizes across trees with no padding or copying.
+
+Randomness is pre-drawn by the caller (per node: a feature index and a
+uniform in ``[0, 1)``), which makes tree fitting a *pure function* of
+``(X, y, w, feat_choice, thr_u)`` — the numpy oracle in ``ref.py``
+consumes the same arrays, and the exactness tests pin the two together.
+Routing lives in ``ops.boot_fit_forest`` / ``ops.boot_forest_predict``.
+
+Semantics (mirrors the seed's ``fit_tree`` breadth-first construction):
+nodes are visited in breadth-first order; an internal node splits on the
+pre-drawn feature at threshold ``lo + u * (hi - lo)`` over its weighted
+rows iff it holds more than one drawn instance and ``hi > lo``; rows at a
+node that does not split stay there, and prediction reads the majority
+label of the deepest node reached.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def n_nodes(depth: int) -> int:
+    """Breadth-first node count of a depth-``depth`` complete binary tree."""
+    return 2 ** (depth + 1) - 1
+
+
+def _fit_one(X, y, w, feat_choice, thr_u, n_labels, depth):
+    """One weighted extra-tree; (feat, thresh, leaf) each (n_nodes,).
+
+    The breadth-first node visit is a ``fori_loop`` (not a static
+    unroll): the streaming bootstrap updates hit many (batch, rows)
+    shape buckets, and an unrolled 63-node graph made every new bucket
+    pay seconds of XLA compile.
+    """
+    m = X.shape[0]
+    nn = n_nodes(depth)
+    n_internal = 2 ** depth - 1
+
+    def body(node, carry):
+        node_of, feat, thresh, leaf = carry
+        mask = (node_of == node) & (w > 0)
+        wm = jnp.where(mask, w, 0).astype(jnp.int32)
+        cnt = jnp.zeros(n_labels, jnp.int32).at[y].add(wm)
+        leaf = leaf.at[node].set(jnp.argmax(cnt).astype(jnp.int32))
+        f = feat_choice[node]
+        col = jnp.take(X, f, axis=1)
+        lo = jnp.min(jnp.where(mask, col, jnp.inf))
+        hi = jnp.max(jnp.where(mask, col, -jnp.inf))
+        split = (node < n_internal) & (jnp.sum(wm) > 1) & (hi > lo)
+        t = lo + thr_u[node] * (hi - lo)  # NaN when node empty: dead
+        feat = feat.at[node].set(jnp.where(split, f, -1))
+        thresh = thresh.at[node].set(jnp.where(split, t, 0.0))
+        node_of = jnp.where(
+            mask & split,
+            jnp.where(col > t, 2 * node + 2, 2 * node + 1),
+            node_of)
+        return node_of, feat, thresh, leaf
+
+    init = (jnp.zeros(m, jnp.int32), jnp.full(nn, -1, jnp.int32),
+            jnp.zeros(nn, jnp.float32), jnp.zeros(nn, jnp.int32))
+    _, feat, thresh, leaf = jax.lax.fori_loop(0, nn, body, init)
+    return feat, thresh, leaf
+
+
+@functools.partial(jax.jit, static_argnames=("n_labels", "depth"))
+def fit_forest(X, y, W, feat_choice, thr_u, *, n_labels, depth):
+    """Fit S weighted extra-trees over shared rows in one dispatch.
+
+    X: (m, p) f32 shared rows; y: (m,) i32 labels; W: (S, m) int
+    multiplicities (row counts of each bootstrap sample); feat_choice:
+    (S, n_nodes) i32 pre-drawn split features; thr_u: (S, n_nodes) f32
+    pre-drawn uniforms. Returns stacked (feat, thresh, leaf), each
+    (S, n_nodes).
+    """
+    X = X.astype(jnp.float32)
+    return jax.vmap(
+        lambda w, fc, u: _fit_one(X, y, w, fc, u, n_labels, depth)
+    )(W, feat_choice, thr_u)
+
+
+@jax.jit
+def forest_predict(feat, thresh, leaf, Xq):
+    """Predicted labels (S, q) of S stacked trees on query rows (q, p)."""
+    depth = (feat.shape[1] + 1).bit_length() - 2
+    Xq = Xq.astype(jnp.float32)
+
+    def one(ft, th, lf):
+        node = jnp.zeros(Xq.shape[0], jnp.int32)
+        for _ in range(depth):
+            f = ft[node]
+            internal = f >= 0
+            xv = jnp.take_along_axis(
+                Xq, jnp.maximum(f, 0)[:, None], axis=1)[:, 0]
+            node = jnp.where(
+                internal,
+                jnp.where(xv > th[node], 2 * node + 2, 2 * node + 1),
+                node)
+        return lf[node]
+
+    return jax.vmap(one)(feat, thresh, leaf)

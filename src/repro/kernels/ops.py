@@ -115,6 +115,83 @@ def stream_update(X, y, nbr_d, nbr_y, x_new, y_new, n, *, mode):
                                    mode=mode)
 
 
+def _pow2(v: int, lo: int = 8) -> int:
+    n = lo
+    while n < v:
+        n *= 2
+    return n
+
+
+def boot_fit_forest(X, y, W, feat_choice, thr_u, *, n_labels, depth):
+    """Stacked weighted extra-tree fits for the bootstrap measure.
+
+    The production path on every backend is the vmapped jitted kernel in
+    ``boot_forest.py`` (one dispatch trains the whole batch); the
+    per-tree numpy oracle in ``ref.py`` is the semantics of record
+    (``REPRO_BOOT_FOREST=ref`` forces it, e.g. to bisect a parity
+    failure). Batch and row dims are padded to power-of-two buckets so
+    the streaming updates (whose shapes drift every tick) reuse a handful
+    of compiled programs — zero-weight rows and zero-weight trees are
+    masked out of the fit, so padding is bit-neutral. Returns numpy
+    ``(feat, thresh, leaf)``, each ``(S, n_nodes)`` — the bootstrap
+    state lives on the host.
+    """
+    import numpy as np
+
+    if os.environ.get("REPRO_BOOT_FOREST") == "ref":
+        outs = [_ref.boot_fit_tree(X, y, W[s], feat_choice[s], thr_u[s],
+                                   n_labels, depth)
+                for s in range(W.shape[0])]
+        return tuple(np.stack([o[i] for o in outs]) for i in range(3))
+    from repro.kernels.boot_forest import fit_forest
+
+    S, m = W.shape
+    # tree batches vary tick-to-tick in the streaming updates; a high
+    # floor pins the batch bucket so almost nothing ever recompiles
+    Sp, mp = _pow2(S, 64), _pow2(m)
+    Xp = np.zeros((mp, X.shape[1]), np.float32)
+    Xp[:m] = X
+    yp = np.zeros(mp, np.int32)
+    yp[:m] = y
+    Wp = np.zeros((Sp, mp), np.int32)
+    Wp[:S, :m] = W
+    nn = feat_choice.shape[1]
+    fcp = np.zeros((Sp, nn), np.int32)
+    fcp[:S] = feat_choice
+    up = np.zeros((Sp, nn), np.float32)
+    up[:S] = thr_u
+    feat, thresh, leaf = fit_forest(
+        jnp.asarray(Xp), jnp.asarray(yp), jnp.asarray(Wp),
+        jnp.asarray(fcp), jnp.asarray(up), n_labels=n_labels, depth=depth)
+    return (np.asarray(feat)[:S], np.asarray(thresh)[:S],
+            np.asarray(leaf)[:S])
+
+
+def boot_forest_predict(feat, thresh, leaf, Xq):
+    """Labels (S, q) of S stacked extra-trees on query rows (q, p)."""
+    import numpy as np
+
+    if os.environ.get("REPRO_BOOT_FOREST") == "ref":
+        return np.stack([_ref.boot_predict_tree(feat[s], thresh[s], leaf[s],
+                                                Xq)
+                         for s in range(feat.shape[0])])
+    from repro.kernels.boot_forest import forest_predict
+
+    S, q = feat.shape[0], Xq.shape[0]
+    Sp, qp = _pow2(S, 64), _pow2(q)
+    fp = np.full((Sp, feat.shape[1]), -1, np.int32)
+    fp[:S] = feat
+    tp = np.zeros((Sp, feat.shape[1]), np.float32)
+    tp[:S] = thresh
+    lp = np.zeros((Sp, feat.shape[1]), np.int32)
+    lp[:S] = leaf
+    Xp = np.zeros((qp, Xq.shape[1]), np.float32)
+    Xp[:q] = Xq
+    out = forest_predict(jnp.asarray(fp), jnp.asarray(tp),
+                         jnp.asarray(lp), jnp.asarray(Xp))
+    return np.asarray(out)[:S, :q]
+
+
 # past this many score elements per (batch, head), fall back to the chunked
 # online-softmax path off-TPU so 32k/500k sequences stay memory-bounded
 _DENSE_SCORE_LIMIT = 2048 * 2048

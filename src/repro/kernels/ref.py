@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def sq_dists(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
@@ -223,6 +224,59 @@ def stream_update_fast(
                                jnp.asarray(y_new, nbr_y.dtype), Ysh))
     newY = jnp.where(newL >= _BIG, y[:, None], newY)
     return d_row, newL, newY
+
+
+def boot_fit_tree(X, y, w, feat_choice, thr_u, n_labels, depth):
+    """Numpy oracle for one weighted extra-tree (``boot_forest._fit_one``).
+
+    Semantics of record for the bootstrap measure's base learner: a
+    breadth-first extra-tree over multiplicity-weighted rows. All float
+    arithmetic stays in f32 and mirrors the jnp kernel expression
+    (``t = lo + u * (hi - lo)``), so the parity tests can pin the vmapped
+    path to this one exactly.
+    """
+    X = np.asarray(X, np.float32)
+    m = X.shape[0]
+    nn = 2 ** (depth + 1) - 1
+    n_internal = 2 ** depth - 1
+    node_of = np.zeros(m, np.int32)
+    feat = np.full(nn, -1, np.int32)
+    thresh = np.zeros(nn, np.float32)
+    leaf = np.zeros(nn, np.int32)
+    inf32 = np.float32(np.inf)
+    for node in range(nn):
+        mask = (node_of == node) & (w > 0)
+        cnt = np.zeros(n_labels, np.int64)
+        np.add.at(cnt, y[mask], w[mask])
+        leaf[node] = np.argmax(cnt)
+        if node < n_internal:
+            f = feat_choice[node]
+            col = X[:, f]
+            lo = np.where(mask, col, inf32).min()
+            hi = np.where(mask, col, -inf32).max()
+            if int(cnt.sum()) > 1 and hi > lo:
+                t = np.float32(lo + thr_u[node] * (hi - lo))
+                feat[node], thresh[node] = f, t
+                node_of[mask] = np.where(
+                    col[mask] > t, 2 * node + 2, 2 * node + 1)
+    return feat, thresh, leaf
+
+
+def boot_predict_tree(feat, thresh, leaf, Xq):
+    """Numpy oracle for ``boot_forest.forest_predict`` on one tree."""
+    Xq = np.asarray(Xq, np.float32)
+    q = Xq.shape[0]
+    depth = (len(feat) + 1).bit_length() - 2
+    node = np.zeros(q, np.int32)
+    for _ in range(depth):
+        f = feat[node]
+        internal = f >= 0
+        xv = Xq[np.arange(q), np.maximum(f, 0)]
+        node = np.where(
+            internal,
+            np.where(xv > thresh[node], 2 * node + 2, 2 * node + 1),
+            node).astype(np.int32)
+    return leaf[node]
 
 
 def flash_attention(

@@ -2,7 +2,8 @@
 
 Unifies the paper's incrementally-and-decrementally optimized measures —
 k-NN / simplified k-NN (Section 3), KDE (Section 4), LS-SVM (Section 5),
-streaming k-NN regression (Section 8.1) — behind one ``fit / observe /
+bootstrap (Section 6, Algorithm 3), streaming k-NN regression
+(Section 8.1) — behind one ``fit / observe /
 evict / pvalues`` surface (the Predictor–Calibrator shape of wrapper
 libraries like puncc), so a new measure plugs into the serving stack by
 registering four functions instead of editing engine code (regression
@@ -223,11 +224,52 @@ def _knn_regression_spec() -> MeasureSpec:
                        intervals=intervals)
 
 
+def _bootstrap_spec() -> MeasureSpec:
+    """Bootstrap CP (paper Section 6, Algorithm 3) served online.
+
+    The state is the host-side shared-sample-pool ``BootstrapState``;
+    ``ctx`` is the measure's keyed ``DrawStream`` — the RNG stream that
+    ``observe``/``evict`` consume for fresh bootstrap draws (keyed by
+    draw id, so identical histories give identical states). Observe
+    oversamples for the new point; evict retires every sample containing
+    the removed point and backfills — both exact vs. a from-scratch
+    build on the same effective sample set (``bootstrap.rebuild``).
+    """
+    import numpy as np
+
+    from repro.core.measures import bootstrap as boot_m
+
+    def fit(X, y, hp):
+        stream = boot_m.DrawStream(hp["seed"])
+        state = boot_m.fit(
+            np.asarray(X, np.float32), np.asarray(y, np.int32),
+            n_labels=hp["n_labels"], B=hp["B"], depth=hp["depth"],
+            seed=hp["seed"], max_bprime=hp["max_bprime"], stream=stream)
+        return state, stream
+
+    def observe(state, stream, x, y, hp):
+        return boot_m.incremental_add(
+            state, np.asarray(x, np.float32), int(y), stream=stream)
+
+    def evict(state, stream, i, hp):
+        return boot_m.decremental_remove(state, int(i), stream=stream)
+
+    def pvalues(state, stream, X_test, hp):
+        return jnp.asarray(
+            boot_m.pvalues_optimized(state, np.asarray(X_test)),
+            jnp.float32)
+
+    return MeasureSpec("bootstrap", fit, observe, evict, pvalues,
+                       defaults={"n_labels": 2, "B": 10, "depth": 5,
+                                 "seed": 0, "max_bprime": 100000})
+
+
 register(_knn_spec("knn", simplified=False))
 register(_knn_spec("simplified_knn", simplified=True))
 register(_kde_spec())
 register(_lssvm_spec())
 register(_knn_regression_spec())
+register(_bootstrap_spec())
 
 
 # ---------------------------------------------------------------------------
