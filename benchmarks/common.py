@@ -20,6 +20,83 @@ def timeit(fn, *args, repeats: int = 3, **kw):
     return float(np.median(ts))
 
 
+def bench_sliding(make_engine, make_traffic, *, cap, chunk=32, reps=4):
+    """Window-full sliding-eviction throughput for one engine family.
+
+    The historic serve benches drive a half-full window, where most
+    ticks are pure observes and the eviction path's cost is invisible.
+    This harness measures the opposite regime — ``window == capacity``
+    and the window already full, so EVERY timed tick runs the
+    decremental eviction — for the production ring layout, the
+    positional-compaction baseline (``layout="compact"``, the pre-PR
+    algorithm), and the evict-free grow-mode reference the ISSUE's
+    O(cap)-eviction target is measured against.
+
+    ``make_engine(layout, window)`` builds an engine (window=None =>
+    grow mode); ``make_traffic(T)`` returns (xs, ys, taus) shaped
+    (T, S, ...). Prefill runs through a grow-mode engine (its tick
+    statically drops the eviction machinery, so filling a 4096-deep
+    window stays cheap); the produced state is layout-compatible with a
+    ``window == capacity`` sliding engine (head == 0, ring modulus ==
+    capacity). Returns the result row (throughputs + ratios).
+    """
+    xs, ys, taus = make_traffic(max(cap, chunk))
+    x2, y2, t2 = xs[:chunk], ys[:chunk], taus[:chunk]
+    sessions = int(x2.shape[1])
+
+    def prefill(depth):
+        """Exactly ``depth`` grow-mode ticks (remainder chunk included —
+        an under-filled window would let timed 'sliding' ticks skip the
+        eviction they are supposed to measure)."""
+        eng = make_engine("ring", None)
+        state = eng.init_state()
+        for lo in range(0, depth, chunk):
+            hi = min(lo + chunk, depth)
+            state, _ = eng.observe_many(state, xs[lo:hi], ys[lo:hi],
+                                        taus[lo:hi])
+        return state
+
+    t = {}
+    for layout in ("ring", "compact", "grow"):
+        if layout == "grow":
+            # evict-free reference: occupancy just short of capacity,
+            # with enough headroom that the timed chunks never trigger
+            # the capacity-doubling growth (which would retrace)
+            eng = make_engine("ring", None)
+            warm = eng.init_state()
+            warm, p = eng.observe_many(warm, x2, y2, t2)  # compile
+            jax.block_until_ready(p)
+            del warm
+            eng.reset_occupancy()
+            state = prefill(cap - reps * chunk - 1)
+        else:
+            eng = make_engine(layout, cap)  # window == capacity
+            state = prefill(cap - chunk)
+            # warmup chunk compiles AND fills the window to exactly cap,
+            # so every timed tick below evicts
+            state, p = eng.observe_many(state, x2, y2, t2)
+            jax.block_until_ready(p)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            state, p = eng.observe_many(state, x2, y2, t2)
+        jax.block_until_ready(p)
+        t[layout] = (time.perf_counter() - t0) / (reps * chunk)
+        del state
+
+    return {
+        "bench_kind": "sliding_full_window",
+        "sessions": sessions,
+        "capacity": cap,
+        "window": cap,
+        "chunk": chunk,
+        "session_steps_per_s_sliding": sessions / t["ring"],
+        "session_steps_per_s_sliding_compact": sessions / t["compact"],
+        "session_steps_per_s_evictfree": sessions / t["grow"],
+        "ring_speedup_vs_compact": t["compact"] / t["ring"],
+        "evict_overhead_vs_evictfree": t["ring"] / t["grow"],
+    }
+
+
 def row(bench: str, config: str, seconds: float, derived: str = "") -> str:
     return f"{bench},{config},{seconds * 1e6:.1f},{derived}"
 

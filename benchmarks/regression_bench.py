@@ -130,6 +130,44 @@ def run(ns=(512, 2048), *, m=8, dim=16, k=7, eps=0.1, sessions=4,
     return results
 
 
+def run_sliding(caps=(256, 1024, 4096), *, dim=16, k=7, chunk=32, reps=4):
+    """Window-full eviction throughput sweep (see serve_bench.run_sliding):
+    ring layout vs positional compaction vs the evict-free reference,
+    with every measured tick running the labeled decremental eviction."""
+    from repro.regression import RegressionServingEngine
+
+    try:  # package import (python -m benchmarks.run) or script run
+        from benchmarks.common import bench_sliding
+    except ImportError:  # executed as a script: benchmarks/ is on sys.path
+        from common import bench_sliding
+
+    rows = []
+    for cap in caps:
+        sessions = 2 if cap >= 4096 else 4
+
+        def mk(layout, window):
+            return RegressionServingEngine(
+                n_sessions=sessions, capacity=cap, dim=dim, k=k,
+                window=window, layout=layout)
+
+        def traffic(T):
+            key = jax.random.PRNGKey(cap + 1)
+            kx, ky, kt = jax.random.split(key, 3)
+            return (jax.random.normal(kx, (T, sessions, dim), jnp.float32),
+                    jax.random.normal(ky, (T, sessions), jnp.float32),
+                    jax.random.uniform(kt, (T, sessions), jnp.float32))
+
+        row = bench_sliding(mk, traffic, cap=cap, chunk=chunk, reps=reps)
+        row.update(dim=dim, k=k)
+        rows.append(row)
+        print(f"[regression_bench] sliding S={sessions} cap={cap:5d} "
+              f"ring {row['session_steps_per_s_sliding']:8.0f}/s  "
+              f"compact {row['session_steps_per_s_sliding_compact']:8.0f}/s"
+              f"  ({row['ring_speedup_vs_compact']:.2f}x)  "
+              f"evict-free {row['session_steps_per_s_evictfree']:8.0f}/s")
+    return rows
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_regression.json")
@@ -139,6 +177,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     ns = (256,) if args.quick else (512, 2048)
     results = run(ns, m=4 if args.quick else 8, sessions=args.sessions)
+    results += run_sliding((256,) if args.quick else (256, 1024, 4096))
     payload = {
         "bench": "regression_intervals",
         "backend": jax.default_backend(),
@@ -149,7 +188,8 @@ def main(argv=None) -> int:
         json.dump(payload, f, indent=2)
     print(f"[regression_bench] wrote {args.out}")
     for row in results:
-        if not row["intervals_finite_frac"] > 0:
+        if "intervals_finite_frac" in row and \
+                not row["intervals_finite_frac"] > 0:
             raise SystemExit("served intervals are not finite")
     return 0
 

@@ -24,7 +24,18 @@ def main(argv=None) -> int:
 
     from benchmarks import (bootstrap_bench, fig2_predict_time,
                             fig3_train_time, fig4_regression, online_bench,
-                            roofline, table2_highdim, table3_parallel)
+                            regression_bench, roofline, serve_bench,
+                            table2_highdim, table3_parallel)
+
+    def _sliding_rows(fn, tag, caps):
+        return [
+            row(f"{tag}/sliding", f"S={r['sessions']},cap={r['capacity']}",
+                r["sessions"] / r["session_steps_per_s_sliding"],
+                f"ring={r['session_steps_per_s_sliding']:.0f}/s "
+                f"compact={r['session_steps_per_s_sliding_compact']:.0f}/s "
+                f"ring_vs_compact={r['ring_speedup_vs_compact']:.2f}x "
+                f"evictfree={r['session_steps_per_s_evictfree']:.0f}/s")
+            for r in fn(caps)]
 
     suites = {
         "fig2": lambda: fig2_predict_time.run(
@@ -48,6 +59,14 @@ def main(argv=None) -> int:
                       "t_standard_per_point_s", "t_tick_s")],
         "online": lambda: online_bench.run(
             t_grid=(64,) if args.quick else (64, 256, 1024)),
+        # window-full sliding eviction: the ring-layout O(cap)-evict
+        # columns (ISSUE 5) — keeps the BENCH trajectory comparable
+        "serve_sliding": lambda: _sliding_rows(
+            serve_bench.run_sliding, "serve",
+            (256,) if args.quick else (256, 1024)),
+        "reg_sliding": lambda: _sliding_rows(
+            regression_bench.run_sliding, "regression",
+            (256,) if args.quick else (256, 1024)),
         "roofline": lambda: roofline.run(mesh_filter=None),
     }
     only = set(args.only.split(",")) if args.only else set(suites)

@@ -113,6 +113,52 @@ def run(grid=((8, 128), (32, 128), (8, 256), (64, 256)), *, steps=192,
     return results
 
 
+def run_sliding(caps=(256, 1024, 4096), *, dim=16, k=7, chunk=32, reps=4):
+    """Window-full eviction throughput sweep (the ISSUE 5 target regime).
+
+    Every measured tick runs the decremental eviction: the production
+    ring layout vs the positional-compaction baseline
+    (``layout="compact"`` — the pre-PR algorithm, whose per-tick
+    (cap, cap) shifts this PR removes) vs the evict-free grow-mode
+    reference. The historic half-full-window grid above leaves eviction
+    nearly invisible; these rows are where the O(cap^2)-vs-O(cap)
+    difference lives.
+    """
+    from repro.serving import ServingEngine
+
+    try:  # package import (python -m benchmarks.run) or script run
+        from benchmarks.common import bench_sliding
+    except ImportError:  # executed as a script: benchmarks/ is on sys.path
+        from common import bench_sliding
+
+    rows = []
+    for cap in caps:
+        sessions = 2 if cap >= 4096 else 4  # (S, cap, cap) f32 memory
+
+        def mk(layout, window):
+            return ServingEngine(
+                n_sessions=sessions, capacity=cap, dim=dim, k=k,
+                n_labels=2, window=window, layout=layout)
+
+        def traffic(T):
+            key = jax.random.PRNGKey(cap)
+            kx, ky, kt = jax.random.split(key, 3)
+            return (jax.random.normal(kx, (T, sessions, dim), jnp.float32),
+                    jax.random.bernoulli(ky, 0.5, (T, sessions)).astype(
+                        jnp.int32),
+                    jax.random.uniform(kt, (T, sessions), jnp.float32))
+
+        row = bench_sliding(mk, traffic, cap=cap, chunk=chunk, reps=reps)
+        row.update(dim=dim, k=k)
+        rows.append(row)
+        print(f"[serve_bench] sliding S={sessions} cap={cap:5d} "
+              f"ring {row['session_steps_per_s_sliding']:9.0f}/s  "
+              f"compact {row['session_steps_per_s_sliding_compact']:9.0f}/s"
+              f"  ({row['ring_speedup_vs_compact']:.2f}x)  "
+              f"evict-free {row['session_steps_per_s_evictfree']:9.0f}/s")
+    return rows
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serve.json")
@@ -120,12 +166,14 @@ def main(argv=None) -> int:
     ap.add_argument("--dim", type=int, default=16)
     ap.add_argument("--chunk", type=int, default=64)
     ap.add_argument("--quick", action="store_true",
-                    help="single config (CI smoke; capacity stays large "
+                    help="small grid (CI smoke; capacities stay large "
                          "enough that an O(cap^2) copy regression shows)")
     args = ap.parse_args(argv)
     grid = ((8, 256),) if args.quick else ((8, 128), (32, 128), (8, 256),
                                            (64, 256))
     results = run(grid, steps=args.steps, dim=args.dim, chunk=args.chunk)
+    results += run_sliding((256, 1024) if args.quick
+                           else (256, 1024, 4096))
     payload = {
         "bench": "serving_engine",
         "backend": jax.default_backend(),

@@ -289,6 +289,70 @@ def hbm_bytes(hlo_text: str, flash_adjusted: bool = False) -> float:
     return total
 
 
+def dense_materializations(hlo_text: str, min_bytes: int) -> list:
+    """Ops that *write* >= ``min_bytes`` of fresh output, per execution.
+
+    The serving engines' ring-layout acceptance check: a sliding tick
+    must never shift/copy/rebuild a (cap, cap) buffer — the only allowed
+    big-result ops are parameters/plumbing, in-place
+    dynamic-update-slice chains (XLA aliases those with the donated
+    input, so they write only the updated row/column), and staged
+    *reduce operands* (a big fused mask/key buffer whose only consumers
+    are reductions collapsing it to O(cap) — read-side scratch the CPU
+    backend sometimes declines to fuse into a second reduce, not a copy
+    of state). Everything else producing a result of at least
+    ``min_bytes`` — pads, concatenates, slices, gathers, copies, and
+    fusions that neither root in a dynamic-update-slice nor feed only
+    reductions — is reported with its while-trip multiplicity, so a
+    caller can assert that nothing big materializes *per tick*
+    (multiplicity > 1) while tolerating one-time setup at the entry.
+
+    Returns a list of dicts: {computation, mult, kind, name, bytes}.
+    """
+    info = computation_multiplicities(hlo_text)
+    comps, mult = info["comps"], info["mult"]
+    fusion_called: set = set()
+    for comp in comps.values():
+        fusion_called |= comp.fusion_calls
+    out = []
+    for cname, m in mult.items():
+        if cname in fusion_called:
+            continue  # fusion internals live in registers/VMEM
+        comp = comps[cname]
+
+        def reduce_rooted(op):
+            if op.kind in ("reduce", "reduce-window"):
+                return True
+            if op.kind != "fusion":
+                return False
+            called = re.search(r"calls=(%[\w.\-]+)", op.line)
+            body = comps.get(called.group(1)) if called else None
+            return body is not None and any(
+                o.kind in ("reduce", "reduce-window") for o in body.ops)
+
+        for op in comp.ops:
+            if op.kind in _FREE_OPS or op.kind == "while":
+                continue
+            if op.result_bytes < min_bytes:
+                continue
+            if op.kind == "dynamic-update-slice":
+                continue  # in-place: writes only the update operand
+            if op.kind == "fusion":
+                called = re.search(r"calls=(%[\w.\-]+)", op.line)
+                body = comps.get(called.group(1)) if called else None
+                if body is not None and any(
+                        o.kind == "dynamic-update-slice"
+                        for o in body.ops):
+                    continue  # DUS-rooted fusion: aliased in place
+            consumers = [o for o in comp.ops if op.name in o.operands]
+            if consumers and all(reduce_rooted(o) for o in consumers):
+                continue  # reduce staging: collapsed to O(cap) in place
+            out.append({"computation": cname, "mult": float(m),
+                        "kind": op.kind, "name": op.name,
+                        "bytes": op.result_bytes})
+    return out
+
+
 def count_ops(hlo_text: str) -> dict:
     """Census of interesting ops (while-trip weighted)."""
     info = computation_multiplicities(hlo_text)
@@ -345,5 +409,6 @@ def model_flops_per_step(n_active_params: int, tokens_per_step: int,
 
 
 __all__ = ["collective_bytes", "hbm_bytes", "count_ops",
-           "computation_multiplicities", "roofline_terms",
-           "model_flops_per_step", "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW"]
+           "computation_multiplicities", "dense_materializations",
+           "roofline_terms", "model_flops_per_step", "PEAK_FLOPS_BF16",
+           "HBM_BW", "ICI_BW"]

@@ -57,16 +57,40 @@ def ensure_room(eng, state, ticks: int, n_of):
     return state
 
 
-def check_window_occupancy(eng, state, n_of) -> None:
-    """One-time ``n <= window`` invariant check for sliding engines.
+def check_window_occupancy(eng, state, n_of, wrap_of=None) -> None:
+    """One-time ring/occupancy invariant check for sliding engines.
 
-    The fused sliding step runs on the ``[:window]`` block of every
-    leaf, which is only valid while no session's occupancy exceeds the
-    window. Engine-produced states keep the invariant by construction;
-    this guards externally supplied states with a single device sync per
-    engine lifetime (``reset_occupancy`` re-arms it).
+    The fused sliding step runs on the ``[:wmax]`` block of every leaf
+    with ring modulus ``wmax``, which is only valid while (a) no
+    session's occupancy exceeds the window and (b) every session's
+    stored ring modulus (``wrap``) equals the engine's ``wmax`` — a
+    state evolved under a different modulus places live slots where this
+    engine would not look. Engine-produced states keep both invariants
+    by construction; this guards externally supplied states with a
+    single device sync per engine lifetime (``reset_occupancy`` re-arms
+    it).
+
+    Grow-mode engines (no window) need the modulus check too: their
+    insert slot is ``(head + n) % wrap``, so a sliding-engine state
+    (wrap == its window block) handed to a grow engine would wrap at
+    the smaller modulus and silently overwrite live points once n
+    crosses it. Their required modulus is the full capacity.
     """
-    if eng.window is None or eng._w_checked:
+    if eng._w_checked:
+        return
+    if eng.window is None:
+        if wrap_of is not None:
+            w = wrap_of(state)
+            lo, hi = int(jnp.min(w)), int(jnp.max(w))
+            if lo != state.capacity or hi != state.capacity:
+                raise ValueError(
+                    f"state ring modulus {lo}..{hi} does not match this "
+                    f"grow-mode engine's capacity {state.capacity}: the "
+                    "state was evolved under a sliding window's confined "
+                    "ring. Normalize it first (session to_linear / "
+                    "grow), or serve it with a sliding engine whose "
+                    "window matches")
+        eng._w_checked = True
         return
     nmax = int(jnp.max(n_of(state)))
     if nmax > eng._wmax:
@@ -75,6 +99,16 @@ def check_window_occupancy(eng, state, n_of) -> None:
             f"{eng.window}: this engine keeps live rows inside the "
             "[:window] block; evict down to the window (or use a "
             "larger-window engine) before serving")
+    if wrap_of is not None:
+        w = wrap_of(state)
+        lo, hi = int(jnp.min(w)), int(jnp.max(w))
+        if lo != eng._wmax or hi != eng._wmax:
+            raise ValueError(
+                f"state ring modulus {lo}..{hi} does not match this "
+                f"engine's window block {eng._wmax}: the state was "
+                "evolved under a different ring layout. Normalize it "
+                "first (session to_linear + init with wrap=window), or "
+                "serve it with an engine whose window matches")
     eng._w_checked = True
 
 

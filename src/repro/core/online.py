@@ -28,6 +28,77 @@ from repro.kernels import ops as kops
 BIG = 1e30
 
 
+# ---------------------------------------------------------------------------
+# ring-buffer slot arithmetic
+# ---------------------------------------------------------------------------
+#
+# The serving engines store their sliding window in a *circular* layout:
+# a scalar ``head`` names the slot of the oldest live point and the live
+# window occupies slots ``(head + i) % wrap`` for ``i in [0, n)``. The
+# modulus ``wrap`` (<= the padded capacity) is part of the state: a
+# sliding engine whose window statically bounds occupancy runs its ring
+# inside the leading ``[:wrap]`` block of every leaf, so per-tick cost
+# scales with the window while the padded capacity can stay larger.
+# Slots at or beyond ``wrap`` are never live. Evicting the oldest point
+# is then a head advance (plus an O(cap) list repair) — no positional
+# compaction ever moves the (cap, cap) distance matrix. Arrival order,
+# which the tie rules rest on, is tracked two ways: the *age* of a slot
+# is derived from ``head`` (0 = oldest), and an explicit per-slot
+# arrival-id vector ``aid`` (a monotone counter stamped at insert)
+# provides the total order the labeled backfill breaks distance ties
+# with. ``head == 0`` with no wrap-around is exactly the historic
+# linear layout, and every function below degenerates to the old bits
+# there.
+
+
+def ring_age(cap: int, head, wrap=None):
+    """(cap,) arrival age of each slot under a ring at ``head`` with
+    modulus ``wrap`` (default: the full capacity): the oldest live slot
+    has age 0; ages ``>= n`` are not live; slots ``>= wrap`` get the
+    sentinel age ``cap`` (never live, since n <= wrap <= cap). ``head``
+    and ``wrap`` may be traced."""
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    if wrap is None:
+        return jnp.where(idx >= head, idx - head, idx - head + cap)
+    wrap = jnp.asarray(wrap, jnp.int32)
+    raw = jnp.where(idx >= head, idx - head, idx - head + wrap)
+    return jnp.where(idx < wrap, raw, cap)
+
+
+def ring_live(cap: int, head, n, wrap=None):
+    """(cap,) live mask of a ring holding ``n`` points at ``head``."""
+    return ring_age(cap, head, wrap) < n
+
+
+def ring_slots(cap: int, head, wrap=None):
+    """(cap,) slot index of each arrival rank: entry i is the slot of
+    the i-th oldest point, ``(head + i) % wrap`` — the gather
+    permutation from ring layout to the historic linear (arrival-order)
+    layout. Entries at ranks >= wrap alias earlier slots; callers mask
+    everything at rank >= n, so the aliases never surface."""
+    s = jnp.arange(cap, dtype=jnp.int32) + jnp.asarray(head, jnp.int32)
+    m = jnp.asarray(cap if wrap is None else wrap, jnp.int32)
+    return jnp.where(s >= m, s - m, s)
+
+
+def ring_mod(v, m):
+    """``v % m`` for a traced scalar already in ``[0, 2 m)`` — the ring
+    steps' head/insert-slot arithmetic (one compare+subtract, no rem)."""
+    return jnp.where(v >= m, v - m, v)
+
+
+def next_aid(aid, head, n, wrap):
+    """Arrival id for the next insert: one past the newest live slot's
+    (the per-slot counters are strictly increasing with recency, so the
+    newest holds the max). An empty window restarts at 0 — ids only
+    order the *live* points. The int32 counter is allowed to wrap: every
+    consumer compares ids as wraparound *differences* from the oldest
+    live id (``drop_backfill``), which stay exact because live ids span
+    at most one window of inserts (far below 2^31)."""
+    newest = ring_mod(head + n - 1 + wrap * (n == 0).astype(n.dtype), wrap)
+    return jnp.where(n > 0, aid[newest] + 1, 0)
+
+
 def cshift(a, s, fill):
     """Conditionally drop the leading row: shift rows up by ``s`` (a
     traced 0/1 scalar) with ``fill`` entering at the tail — one padded
@@ -69,14 +140,103 @@ def drop_backfill_core(L, es, cand, Ds, *, k):
         tprime = jnp.full((cap,), -1.0, L.dtype)
     mprime = (jnp.sum((L == tprime[:, None]).astype(jnp.int32), axis=1)
               - (es == tprime).astype(jnp.int32))
-    cnt = jnp.sum(jnp.where(cand & (Ds == tprime[:, None]), 1, 0), axis=1)
-    gtmin = jnp.min(
-        jnp.where(cand & (Ds > tprime[:, None]), Ds, BIG), axis=1)
+    # one variadic reduce computes the count and the min together — a
+    # single fused pass over the stored (cap, cap) distances instead of
+    # two (integer sum and f32 min are order-free, so the fused pass is
+    # bit-identical to separate reductions). This pass is the whole
+    # per-tick cost of eviction under the ring layout.
+    cnt, gtmin = jax.lax.reduce(
+        (jnp.where(cand & (Ds == tprime[:, None]), 1, 0).astype(jnp.int32),
+         jnp.where(cand & (Ds > tprime[:, None]), Ds, BIG)),
+        (jnp.int32(0), jnp.asarray(BIG, Ds.dtype)),
+        lambda acc, x: (acc[0] + x[0], jnp.minimum(acc[1], x[1])),
+        (1,))
     b = jnp.where(cnt > mprime, tprime, gtmin)
     cols = jnp.arange(k)
     newL = jnp.where(cols[None, :] < pos0[:, None], L,
                      jnp.where(cols[None, :] < k - 1, Lup, b[:, None]))
     return newL, pos0, cols, b, tprime, mprime
+
+
+def drop_backfill(L, es, cand, Ds, aff, *, k, Ly=None, La=None, ys=None,
+                  aid=None, age=None, slots=None, aid0=None):
+    """The one shared decremental list repair of both serving engines.
+
+    For each row flagged in ``aff``: drop the first slot of the ascending
+    k-best list ``L`` holding that row's evicted distance ``es`` and
+    backfill the new k-th best by multiset rank over the stored distances
+    (``drop_backfill_core`` above). Rows not flagged pass through
+    bitwise untouched. Classification (``Ly is None``) repairs distances
+    only and returns ``newL``.
+
+    The labeled form (regression: pass ``Ly``/``La``/``ys``/``aid`` and
+    the ring geometry ``age``/``slots``) also repairs the parallel
+    neighbour-*label* lists ``Ly`` and the neighbour-*arrival-id* lists
+    ``La`` and returns ``(newL, newLy, newLa)``. The backfill label
+    must follow fit's ties-toward-*earliest-arrival* order: among the
+    candidate columns at the backfill distance b, the occurrences the
+    surviving list already holds are the earliest arrivals, so the
+    label comes from the next-earliest — the candidate with the
+    smallest arrival id above the largest id the list already stores at
+    that distance (read from ``La``; -1, i.e. below every live id, when
+    the backfill value is new to the list). Arrival order is read from
+    the per-slot arrival ids ``aid`` (strictly increasing with recency,
+    distinct), NOT from the slot position — under the ring layout the
+    two disagree across the wrap-around seam. Every id comparison is a
+    wraparound int32 *difference* from ``aid0`` (the evicted — globally
+    earliest — live id): live ids span at most one window of inserts,
+    far below 2^31, so the differences stay exact even after the raw
+    counters overflow on a long-lived stream. The pick itself needs no
+    sort and no (slow) index-reduction: arrival *rank* is a pure
+    function of the slot (``age``), so one plain masked min over the
+    broadcast ranks finds the earliest valid rank, and ``slots`` (the
+    rank -> slot permutation, ``ring_slots``) converts it back to a
+    column index with a single gather. For a linear-layout caller
+    ``age`` and ``slots`` are both ``jnp.arange(cap)``.
+    """
+    newL, pos0, cols, b, tprime, mprime = drop_backfill_core(
+        L, es, cand, Ds, k=k)
+    if Ly is None:
+        return jnp.where(aff[:, None], newL, L)
+
+    # largest arrival id the list already holds at the backfill value
+    # (as a wraparound difference from the anchor ``aid0``). When
+    # b == t', the list's occurrences of t' are the earliest arrivals
+    # at that distance, so anything above ``thr`` is new; the dropped
+    # (evicted) occurrence may contribute to the max but it rebases to
+    # exactly 0, below every surviving id. When b == gtmin the list
+    # holds no occurrence of b (gtmin > t' strictly) and the pick is
+    # simply the earliest.
+    cap = L.shape[0]
+    aid0 = jnp.asarray(aid0, jnp.int32)
+    rel_La = La.astype(jnp.int32) - aid0  # int32 wrap-subtract
+    thr = jnp.where(
+        b == tprime,
+        jnp.max(jnp.where(L == tprime[:, None], rel_La, -1), axis=1), -1)
+    rel_aid = (aid.astype(jnp.int32) - aid0)[None, :]
+    valid = cand & (Ds == b[:, None]) & (rel_aid > thr[:, None])
+    # min over arrival *rank* (a pure function of the slot), then one
+    # gather through the rank -> slot permutation — no sort and no slow
+    # index-reduction anywhere in the pick
+    amin = jnp.min(jnp.where(valid, age[None, :].astype(jnp.int32), cap),
+                   axis=1)
+    sel = slots[jnp.minimum(amin, cap - 1)]
+    yb = ys[sel]  # rows where b >= BIG pick garbage, fixed up below
+    ab = aid[sel].astype(jnp.int32)
+
+    Lyup = jnp.concatenate([Ly[:, 1:], Ly[:, :1]], axis=1)
+    newLy = jnp.where(cols[None, :] < pos0[:, None], Ly,
+                      jnp.where(cols[None, :] < k - 1, Lyup, yb[:, None]))
+    Laup = jnp.concatenate([La[:, 1:], La[:, :1]], axis=1)
+    newLa = jnp.where(cols[None, :] < pos0[:, None], La,
+                      jnp.where(cols[None, :] < k - 1, Laup, ab[:, None]))
+    # missing-neighbour slots carry the row's own label (fit convention)
+    # and the neutral arrival id 0
+    newLy = jnp.where(newL >= BIG, ys[:, None], newLy)
+    newLa = jnp.where(newL >= BIG, 0, newLa)
+    return (jnp.where(aff[:, None], newL, L),
+            jnp.where(aff[:, None], newLy, Ly),
+            jnp.where(aff[:, None], newLa, La))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -122,7 +282,8 @@ def observe(state: OnlineKnnState, x_new, y_new, tau, *, k):
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def observe_with_dists(state: OnlineKnnState, x_new, y_new, tau, *, k):
+def observe_with_dists(state: OnlineKnnState, x_new, y_new, tau, *, k,
+                       head=None, wrap=None):
     """``observe`` that also returns the live-masked distance vector.
 
     Identical arithmetic to ``observe`` (same p-value bits); the extra
@@ -130,19 +291,40 @@ def observe_with_dists(state: OnlineKnnState, x_new, y_new, tau, *, k):
     row, BIG on inert rows — callers that maintain auxiliary per-pair
     state (``repro.serving.session`` keeps the pairwise distance matrix
     for exact decremental eviction) reuse it instead of recomputing.
+
+    ``head`` (traced scalar, default linear layout) switches the state
+    to ring-buffer slot semantics: the live window occupies slots
+    ``(head + i) % wrap`` (modulus ``wrap``, default the capacity) and
+    the new point lands at slot ``(head + n) % wrap`` instead of slot
+    ``n``. The p-value is a layout-free reduction over the same live
+    multiset, so its bits do not depend on ``head``/``wrap``.
     """
-    return _observe_impl(state, x_new, y_new, tau, k=k)
+    return _observe_impl(state, x_new, y_new, tau, k=k, head=head,
+                         wrap=wrap)
 
 
-def _observe_impl(state: OnlineKnnState, x_new, y_new, tau, *, k):
+def _observe_impl(state: OnlineKnnState, x_new, y_new, tau, *, k,
+                  head=None, wrap=None):
     cap = state.X.shape[0]
-    live = jnp.arange(cap) < state.n
+    if head is None:
+        live = jnp.arange(cap) < state.n
+        # the clamp is bit-neutral under the n < cap precondition; it
+        # keeps a gated caller's discarded write in bounds at n == cap
+        # (an out-of-bounds dynamic-update start is implementation-
+        # defined once XLA fuses it with a pad — it can read the fill)
+        idx = jnp.minimum(state.n, cap - 1)
+        head = jnp.zeros((), jnp.int32)
+    else:
+        live = ring_live(cap, head, state.n, wrap)
+        m = jnp.asarray(cap if wrap is None else wrap, jnp.int32)
+        tail = head + state.n
+        idx = jnp.where(tail >= m, tail - m, tail)
     # fused distance row + same-label k-best merge: one Pallas pass on
     # TPU; the CPU/f64 reference is expression-identical to the historic
     # inline code, so the stream's p-value bits are unchanged
     d, merged, _ = kops.stream_update(
         state.X, state.y, state.best, None, x_new, y_new, state.n,
-        mode="class")
+        mode="class", head=head, wrap=wrap)
     same = (state.y == y_new) & live
 
     # candidate score: sum of k best same-label distances
@@ -167,7 +349,6 @@ def _observe_impl(state: OnlineKnnState, x_new, y_new, tau, *, k):
     # learn: the merged lists come from the fused pass; the new row's own
     # list is the k best same-label distances seen so far
     own = jnp.sort(-jax.lax.top_k(-cand, k)[0])
-    idx = state.n
     new_state = OnlineKnnState(
         X=state.X.at[idx].set(x_new),
         y=state.y.at[idx].set(y_new.astype(state.y.dtype)),
@@ -218,4 +399,6 @@ def run_stream(X, y, *, k, key, capacity=None):
 
 __all__ = ["OnlineKnnState", "init", "observe", "observe_with_dists",
            "run_stream", "power_martingale_increment",
-           "simple_mixture_log_martingale"]
+           "simple_mixture_log_martingale", "ring_age", "ring_live",
+           "ring_slots", "cshift", "drop_backfill", "drop_backfill_core",
+           "BIG"]

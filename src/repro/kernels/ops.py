@@ -87,7 +87,8 @@ def interval_sweep(X, a_prime, kth_dist, kth_label, live, X_test, a_test, k):
         X, a_prime, kth_dist, kth_label, live, X_test, a_test, k)
 
 
-def stream_update(X, y, nbr_d, nbr_y, x_new, y_new, n, *, mode):
+def stream_update(X, y, nbr_d, nbr_y, x_new, y_new, n, *, mode, head=None,
+                  wrap=None):
     """Fused streaming-observe front end: distance row + gated ordered
     k-best merge for one incoming point; Pallas on TPU.
 
@@ -95,24 +96,28 @@ def stream_update(X, y, nbr_d, nbr_y, x_new, y_new, n, *, mode):
     ``core.online``; ``mode="reg"`` (k-th-distance gate, ``sq_dists``
     distances, labels ride along) serves ``regression.stream``.
     ``nbr_y=None`` (classification has no label lists) passes zeros
-    through. Returns ``(d_row, nbr_d', nbr_y')`` in ``X.dtype``.
+    through. ``head``/``wrap`` (traced scalars or None) select the
+    serving engines' ring-buffer slot layout — live slots
+    ``(head + i) % wrap`` instead of ``[0, n)``. Returns
+    ``(d_row, nbr_d', nbr_y')`` in ``X.dtype``.
     """
     if nbr_y is None:
         nbr_y = jnp.zeros_like(nbr_d)
     if X.dtype == jnp.float64:
         return _ref.stream_update_fast(X, y, nbr_d, nbr_y, x_new, y_new, n,
-                                       mode=mode)
+                                       mode=mode, head=head, wrap=wrap)
     if _on_tpu() or _interpret():
         from repro.kernels.stream_update import stream_update as _pallas
 
         d, nd, ny = _pallas(X, y, nbr_d, nbr_y, x_new, y_new, n,
-                            mode=mode, interpret=not _on_tpu())
+                            mode=mode, interpret=not _on_tpu(), head=head,
+                            wrap=wrap)
         return (d.astype(X.dtype), nd.astype(nbr_d.dtype),
                 ny.astype(nbr_y.dtype))
     # sortless form — bit-identical to _ref.stream_update, much faster
     # on CPU (no comparator sort); the parity tests pin the two together
     return _ref.stream_update_fast(X, y, nbr_d, nbr_y, x_new, y_new, n,
-                                   mode=mode)
+                                   mode=mode, head=head, wrap=wrap)
 
 
 def _pow2(v: int, lo: int = 8) -> int:

@@ -113,9 +113,25 @@ def reg_interval_endpoints(
 _BIG = 1e30  # matches core.online.BIG / core.regression.BIG
 
 
+def _ring_live(cap: int, head, n, wrap=None) -> jnp.ndarray:
+    """(cap,) live mask of a ring window: slot ``(head + i) % wrap`` is
+    live for ``i in [0, n)``; slots ``>= wrap`` never are. ``head=None``
+    (or 0, full-capacity ``wrap``) is the historic linear layout, where
+    this reduces to ``arange(cap) < n`` bit-for-bit. Mirrors
+    ``core.online.ring_live`` (not imported here: ``core.online`` sits
+    above this module in the import graph)."""
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    if head is None:
+        return idx < n
+    m = jnp.asarray(cap if wrap is None else wrap, jnp.int32)
+    age = jnp.where(idx >= head, idx - head, idx - head + m)
+    return (age < n) & (idx < m)
+
+
 def stream_update(
     X: jnp.ndarray, y: jnp.ndarray, nbr_d: jnp.ndarray, nbr_y: jnp.ndarray,
     x_new: jnp.ndarray, y_new: jnp.ndarray, n: jnp.ndarray, *, mode: str,
+    head=None, wrap=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Fused streaming observe front end: distance row + k-best merge.
 
@@ -144,9 +160,16 @@ def stream_update(
     mirror ``core.online._observe_impl`` / ``regression.stream.observe``
     exactly, so routing through this oracle keeps the streaming states
     bit-identical to refit-from-scratch.
+
+    ``head`` (traced scalar or None) selects the serving engines'
+    ring-buffer slot layout: live slots are ``(head + i) % wrap`` rather
+    than ``[0, n)`` (``wrap`` defaults to the capacity). Per-slot
+    arithmetic is unchanged — only the live mask moves — so the emitted
+    distances/list values are the same bits wherever a slot is live
+    under both layouts.
     """
     cap, k = nbr_d.shape
-    live = jnp.arange(cap) < n
+    live = _ring_live(cap, head, n, wrap)
     if mode == "class":
         d = jnp.sqrt(jnp.maximum(
             jnp.sum((X - x_new[None]) ** 2, axis=-1), 0.0))
@@ -193,6 +216,7 @@ def _ordered_insert(L, c):
 def stream_update_fast(
     X: jnp.ndarray, y: jnp.ndarray, nbr_d: jnp.ndarray, nbr_y: jnp.ndarray,
     x_new: jnp.ndarray, y_new: jnp.ndarray, n: jnp.ndarray, *, mode: str,
+    head=None, wrap=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Sortless form of ``stream_update`` — the production CPU path.
 
@@ -202,7 +226,7 @@ def stream_update_fast(
     dominates the observe tick on CPU at large capacities.
     """
     cap, k = nbr_d.shape
-    live = jnp.arange(cap) < n
+    live = _ring_live(cap, head, n, wrap)
     if mode == "class":
         d = jnp.sqrt(jnp.maximum(
             jnp.sum((X - x_new[None]) ** 2, axis=-1), 0.0))

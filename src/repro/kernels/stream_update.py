@@ -49,6 +49,8 @@ def _kernel(scal_ref, x_ref, X_ref, y_ref, nd_ref, ny_ref,
             d_ref, ndo_ref, nyo_ref, *, k, mode, block_n):
     n = scal_ref[0, 0]
     y_new = scal_ref[0, 1]
+    head = scal_ref[0, 2]  # ring-buffer start slot; 0 == linear layout
+    wrap = scal_ref[0, 3]  # ring modulus; == cap in the linear layout
     x = x_ref[...].astype(jnp.float32)  # (1, p)
     X = X_ref[...].astype(jnp.float32)  # (bn, p)
     if mode == "class":
@@ -66,7 +68,13 @@ def _kernel(scal_ref, x_ref, X_ref, y_ref, nd_ref, ny_ref,
     j = pl.program_id(0)
     rows = (jax.lax.broadcasted_iota(jnp.float32, d.shape, 0)
             + jnp.float32(block_n) * j.astype(jnp.float32))
-    live = rows < n  # row ids and n are exact in f32 (cap << 2^24)
+    # ring liveness: slot (head + i) % wrap is live for i < n. Row ids,
+    # head, wrap and n are exact in f32 (cap << 2^24); the explicit
+    # rows < wrap guard keeps slots beyond the ring modulus (and the
+    # block-size padding rows) inert even when the wrap term would hand
+    # them a small age.
+    age = jnp.where(rows < head, rows - head + wrap, rows - head)
+    live = (age < n) & (rows < wrap)
     d_row = jnp.where(live, d, _BIG)
 
     L = nd_ref[...].astype(jnp.float32)  # (bn, k) ascending, BIG-padded
@@ -103,12 +111,16 @@ def _kernel(scal_ref, x_ref, X_ref, y_ref, nd_ref, ny_ref,
 )
 def stream_update(
     X, y, nbr_d, nbr_y, x_new, y_new, n, *,
-    mode: str, block_n: int = 256, interpret: bool = False,
+    mode: str, block_n: int = 256, interpret: bool = False, head=None,
+    wrap=None,
 ):
     """Fused distance row + gated ordered k-best merge for one new point.
 
     Returns ``(d_row (cap,), nbr_d' (cap, k), nbr_y' (cap, k))``, all
     f32 — see ``ref.stream_update`` for the exact semantics per mode.
+    ``head`` selects the serving engines' ring-buffer slot layout (live
+    slots ``(head + i) % wrap``, slots >= wrap inert); None/0 with a
+    full-capacity ``wrap`` is the linear layout.
     """
     if mode not in ("class", "reg"):
         raise ValueError(f"unknown stream_update mode {mode!r}")
@@ -120,15 +132,21 @@ def stream_update(
     yp = _pad_to(y.astype(jnp.float32)[:, None], 0, bn)
     ndp = _pad_to(nbr_d.astype(jnp.float32), 0, bn)
     nyp = _pad_to(nbr_y.astype(jnp.float32), 0, bn)
+    if head is None:
+        head = 0
+    if wrap is None:
+        wrap = cap
     scal = jnp.stack([jnp.asarray(n, jnp.float32).reshape(()),
-                      jnp.asarray(y_new, jnp.float32).reshape(())])[None]
+                      jnp.asarray(y_new, jnp.float32).reshape(()),
+                      jnp.asarray(head, jnp.float32).reshape(()),
+                      jnp.asarray(wrap, jnp.float32).reshape(())])[None]
     capp, p = Xp.shape
     kern = functools.partial(_kernel, k=k, mode=mode, block_n=bn)
     d, nd2, ny2 = pl.pallas_call(
         kern,
         grid=(capp // bn,),
         in_specs=[
-            pl.BlockSpec((1, 2), lambda j: (0, 0)),
+            pl.BlockSpec((1, 4), lambda j: (0, 0)),
             pl.BlockSpec((1, p), lambda j: (0, 0)),
             pl.BlockSpec((bn, p), lambda j: (j, 0)),
             pl.BlockSpec((bn, 1), lambda j: (j, 0)),

@@ -62,17 +62,25 @@ class RegressionServingEngine:
                 O(cap) in-place path). The state passed to ``observe`` /
                 ``observe_many`` is deleted by the call; reuse raises.
                 ``False`` restores copy semantics (input stays valid).
+    layout:     "ring" (default) — circular row indexing; a sliding tick
+                evicts by advancing the per-session head pointer, so the
+                (cap, cap) distance matrices are never shifted/copied.
+                "compact" — the historic positional layout (O(cap^2)
+                eviction traffic); kept as the benchmark baseline and
+                the exactness oracle, bit-identical to "ring".
     """
 
     def __init__(self, *, n_sessions: int, capacity: int, dim: int, k: int,
                  window: int | None = None, dtype=jnp.float32,
-                 donate: bool = True):
+                 donate: bool = True, layout: str = "ring"):
         if window is not None and window > capacity:
             raise ValueError(f"window {window} exceeds capacity {capacity}")
         if window is not None and window < 1:
             raise ValueError("window must be >= 1")
         if capacity < k:
             raise ValueError(f"capacity {capacity} < k {k}")
+        if layout not in ("ring", "compact"):
+            raise ValueError(f"unknown layout {layout!r}")
         self.n_sessions = n_sessions
         self.capacity = capacity
         self.dim = dim
@@ -80,15 +88,19 @@ class RegressionServingEngine:
         self.window = window
         self.dtype = dtype
         self.donate = donate
+        self.layout = layout
         # the fused sliding step: evict-if-full + observe + active mask
-        # in one pass (no cond/select on the (cap, cap) leaves); grow
-        # mode (window=None) statically drops the eviction machinery.
-        # A sliding window statically bounds occupancy, so the tick runs
-        # on the [:window] block of every leaf (cost scales with the
-        # window, not the padded capacity) — observe_many verifies the
-        # n <= window invariant once per externally supplied state.
+        # in one pass; grow mode (window=None) statically drops the
+        # eviction machinery. A sliding window statically bounds
+        # occupancy, so the tick runs on the [:window] block of every
+        # leaf with ring modulus == window (cost scales with the window,
+        # not the padded capacity) — observe_many verifies the
+        # occupancy + ring-modulus invariants once per externally
+        # supplied state.
         wmax = None if window is None else max(min(window, capacity), k)
-        step = functools.partial(sess_m._sliding_step, k=k,
+        step_fn = (sess_m._sliding_step if layout == "ring"
+                   else sess_m._sliding_step_compact)
+        step = functools.partial(step_fn, k=k,
                                  evictable=window is not None, wmax=wmax)
         self._wmax = wmax
         self._w_checked = False
@@ -111,8 +123,13 @@ class RegressionServingEngine:
     # -- state --------------------------------------------------------------
 
     def init_state(self) -> RegStreamState:
-        """Stacked RegStreamState with a leading (n_sessions,) axis."""
-        one = sess_m.init(self.capacity, self.dim, self.k, dtype=self.dtype)
+        """Stacked RegStreamState with a leading (n_sessions,) axis.
+
+        Sliding engines confine every session's ring to the
+        ``[:window]`` leaf block (``wrap == wmax``); grow mode uses the
+        full capacity as the modulus (the ring never wraps there)."""
+        one = sess_m.init(self.capacity, self.dim, self.k,
+                          dtype=self.dtype, wrap=self._wmax)
         return jax.tree_util.tree_map(
             lambda a: jnp.broadcast_to(a, (self.n_sessions,) + a.shape),
             one)
@@ -162,7 +179,8 @@ class RegressionServingEngine:
             active = jnp.ones(xs.shape[:2], dtype=bool)
         state = engine_utils.ensure_room(self, state, xs.shape[0],
                                          lambda s: s.n)
-        engine_utils.check_window_occupancy(self, state, lambda s: s.n)
+        engine_utils.check_window_occupancy(self, state, lambda s: s.n,
+                                            lambda s: s.wrap)
         return self._step_many(state, xs, ys.astype(self.dtype),
                                taus.astype(self.dtype),
                                self._windows(state), active)
@@ -175,9 +193,19 @@ class RegressionServingEngine:
         self._w_checked = False
 
     def grow(self, state: RegStreamState, factor: int = 2) -> RegStreamState:
-        """Double every session's capacity (host-side, preserves state)."""
+        """Double every session's capacity (host-side, preserves state).
+
+        Session-level grow normalizes each ring to linear order with a
+        full-capacity modulus; a sliding engine pins the modulus back to
+        its window block (the normalized state fits it: head == 0,
+        n <= window)."""
         out = jax.vmap(functools.partial(sess_m.grow, factor=factor))(state)
         self.capacity = out.capacity
+        if self._wmax is not None:
+            out = RegStreamState(out.X, out.y, out.D, out.nbr_d, out.nbr_y,
+                                 out.n, out.head, out.aid,
+                                 jnp.full_like(out.wrap, self._wmax),
+                                 out.nbr_a)
         return out
 
     def intervals(self, state: RegStreamState, X_test,

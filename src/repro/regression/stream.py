@@ -12,21 +12,33 @@ The trick is the same as ``serving/session.py`` for classification: keep
 the live pairwise-distance matrix ``D`` (one row+column per ``observe`` —
 the row is needed for the online p-value anyway), so decremental removal
 backfills k-best lists from stored exact distances instead of re-deriving
-them. Bit-exactness additionally needs three invariants special to the
+them. Storage is the same **ring buffer**: ``head`` names the slot of the
+oldest live point, the window occupies slots ``(head + i) % cap``, and
+``evict_oldest`` is a head advance plus an O(cap·k) list repair — the
+(cap, cap) ``D`` is never positionally compacted. ``aid`` stamps each
+slot with a monotone arrival id; it is the tie-break key wherever
+arrival order (not slot order) decides between equal distances.
+Bit-exactness additionally needs three invariants special to the
 regression measure, where neighbour *labels* (not just distances) enter
 the scores:
 
 * ``nbr_d``/``nbr_y`` store each point's k nearest distances and labels in
-  ``fit``'s exact order (ascending distance, ties toward the lower index:
-  a new arrival carries the largest index, so it is inserted strictly
-  below equal distances — a stable argsort with the candidate appended
-  last reproduces ``top_k``'s tie rule);
+  ``fit``'s exact order (ascending distance, ties toward the *earliest
+  arrival*: a new arrival is inserted strictly below equal distances — a
+  stable argsort with the candidate appended last reproduces ``top_k``'s
+  tie rule once rows are read in arrival order);
 * the label attached to a BIG (missing-neighbour) slot of row i is
   ``y_i`` — exactly what ``fit`` produces at window size n == k, where the
   only BIG entry in a row is its own masked diagonal;
 * distance rows/columns are computed with the very ``kops.sq_dists``
   expression ``fit`` uses, which is bitwise row-decomposable and padding-
   invariant on the supported backends (checked by the property tests).
+
+Where a computation is arrival-order sensitive (the new point's own
+top-k list, whose equal-distance neighbours must be taken oldest-first),
+the (cap,) vectors are gathered through ``ring_slots`` into arrival
+order first — an O(cap) gather, after which the historic linear-layout
+expressions run unchanged and therefore produce the same bits.
 
 All arrays are capacity-padded and fixed-shape, so every update is one
 jit-stable dispatch and vmaps across tenants (``repro.regression.engine``).
@@ -39,7 +51,9 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.core.online import drop_backfill_core
+from repro.core.online import (drop_backfill, next_aid as _next_aid,
+                               ring_age, ring_live, ring_mod as _mod_cap,
+                               ring_slots)
 from repro.core.regression import BIG, KnnRegState
 from repro.kernels import ops as kops
 
@@ -47,12 +61,15 @@ from repro.kernels import ops as kops
 @jax.tree_util.register_pytree_node_class
 @dataclass
 class RegStreamState:
-    """Capacity-padded streaming k-NN regression state.
+    """Capacity-padded streaming k-NN regression state (ring layout).
 
-    Rows ``[0, n)`` are live in arrival order. Inert rows hold zeros in
-    ``X``/``y`` (zero rows keep ``sq_dists`` padding-invariant) and BIG in
-    ``D``/``nbr_d``; ``D`` is BIG on the diagonal, mirroring ``fit``'s
-    self-exclusion mask.
+    Slots ``(head + i) % cap``, ``i in [0, n)`` are live in arrival
+    order. Never-written slots hold zeros in ``X``/``y`` (zero rows keep
+    ``sq_dists`` padding-invariant) and BIG in ``D``/``nbr_d``; ``D`` is
+    BIG on the diagonal, mirroring ``fit``'s self-exclusion mask. Slots
+    that have *left* the window may hold stale finite values — every
+    reader masks by ring liveness (or gathers the live window into
+    arrival order via ``arrival_view``), never by slot position.
     """
 
     X: jnp.ndarray  # (cap, p)
@@ -61,10 +78,15 @@ class RegStreamState:
     nbr_d: jnp.ndarray  # (cap, k) k nearest distances, ascending
     nbr_y: jnp.ndarray  # (cap, k) their labels, same order
     n: jnp.ndarray  # () live count
+    head: jnp.ndarray  # () slot of the oldest live point (ring start)
+    aid: jnp.ndarray  # (cap,) per-slot arrival ids (monotone at insert)
+    wrap: jnp.ndarray  # () ring modulus (<= cap; slots >= wrap inert)
+    nbr_a: jnp.ndarray  # (cap, k) the neighbours' arrival ids (0 at BIG)
 
     def tree_flatten(self):
         return ((self.X, self.y, self.D, self.nbr_d, self.nbr_y,
-                 self.n), None)
+                 self.n, self.head, self.aid, self.wrap,
+                 self.nbr_a), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -79,7 +101,11 @@ class RegStreamState:
         return self.nbr_d.shape[-1]
 
 
-def init(capacity: int, p: int, k: int, dtype=jnp.float32) -> RegStreamState:
+def init(capacity: int, p: int, k: int, dtype=jnp.float32,
+         wrap: int | None = None) -> RegStreamState:
+    """Fresh empty state. ``wrap`` (default: the capacity) is the ring
+    modulus — a sliding engine whose window statically bounds occupancy
+    confines the ring to the leading ``[:wrap]`` block of every leaf."""
     if capacity < k:
         raise ValueError(
             f"capacity {capacity} < k {k}: the k-best machinery (top_k) "
@@ -91,33 +117,181 @@ def init(capacity: int, p: int, k: int, dtype=jnp.float32) -> RegStreamState:
         nbr_d=jnp.full((capacity, k), BIG, dtype=dtype),
         nbr_y=jnp.zeros((capacity, k), dtype=dtype),
         n=jnp.zeros((), dtype=jnp.int32),
+        head=jnp.zeros((), dtype=jnp.int32),
+        aid=jnp.zeros((capacity,), dtype=jnp.int32),
+        wrap=jnp.asarray(capacity if wrap is None else wrap, jnp.int32),
+        nbr_a=jnp.zeros((capacity, k), dtype=jnp.int32),
     )
+
+
+def _merge_aid(nbr_d_pre, nbr_a, cand_d, new_aid, merged_d):
+    """Mirror the kernel's ordered k-best merge on the arrival-id lists.
+
+    The kernel (``kops.stream_update``) merges the candidate into the
+    distance/label lists; the id rider replays the same branch-free
+    insert from the pre-merge distances: ``pos = #{j : L[j] <= c}``
+    places the candidate strictly after equal values, every slot below
+    keeps its id, the insert slot takes the new point's id, everything
+    above shifts. BIG (missing-neighbour) slots carry the neutral id 0.
+    """
+    k = nbr_d_pre.shape[1]
+    pos = jnp.sum((nbr_d_pre <= cand_d[:, None]).astype(jnp.int32),
+                  axis=1, keepdims=True)
+    cols = jnp.arange(k)[None, :]
+    Ash = jnp.concatenate([nbr_a[:, :1], nbr_a[:, :k - 1]], axis=1)
+    newA = jnp.where(cols < pos, nbr_a,
+                     jnp.where(cols == pos,
+                               jnp.asarray(new_aid, jnp.int32), Ash))
+    return jnp.where(merged_d >= BIG, 0, newA)
+
+
+def _arrival_leaves(state: RegStreamState):
+    """(X, y, nbr_d, nbr_y) gathered into arrival order with the linear
+    layout's inert fills (0 / 0 / BIG / 0) beyond ``n`` — bit-identical
+    to the historic positional storage, stale slots scrubbed. O(cap·p)
+    gathers; ``D`` is deliberately excluded (the read paths never touch
+    it, and its gather is the O(cap^2) cost the ring layout avoids)."""
+    cap = state.capacity
+    slots = ring_slots(cap, state.head, state.wrap)
+    live = jnp.arange(cap) < state.n
+    X = jnp.where(live[:, None], state.X[slots], 0.0)
+    y = jnp.where(live, state.y[slots], 0.0)
+    nbr_d = jnp.where(live[:, None], state.nbr_d[slots], BIG)
+    nbr_y = jnp.where(live[:, None], state.nbr_y[slots], 0.0)
+    return X, y, nbr_d, nbr_y
+
+
+def arrival_view(state: RegStreamState) -> RegStreamState:
+    """The state with every O(cap) leaf in arrival order (head == 0).
+
+    ``D`` is passed through untouched (still ring-indexed!) — callers of
+    this view are the read paths, which never consult ``D``. For a full
+    linear normalization including ``D`` use ``to_linear``."""
+    X, y, nbr_d, nbr_y = _arrival_leaves(state)
+    cap = state.capacity
+    slots = ring_slots(cap, state.head, state.wrap)
+    live = jnp.arange(cap) < state.n
+    return RegStreamState(X, y, state.D, nbr_d, nbr_y, state.n,
+                          jnp.zeros((), jnp.int32),
+                          jnp.where(live, state.aid[slots], 0),
+                          jnp.int32(cap),
+                          jnp.where(live[:, None], state.nbr_a[slots], 0))
+
+
+@jax.jit
+def to_linear(state: RegStreamState) -> RegStreamState:
+    """Full linear-layout normalization, ``D`` included (O(cap^2) gather).
+
+    Leaf-for-leaf bit-identical (arrival ids included: the absolute
+    counters are preserved, since the neighbour-id lists ``nbr_a``
+    reference them by value) to the same stream served through the
+    historic linear layout — the equivalence the exactness tests
+    assert. Used by ``grow`` and the tests, never on the serving
+    tick."""
+    view = arrival_view(state)
+    cap = state.capacity
+    slots = ring_slots(cap, state.head, state.wrap)
+    live = jnp.arange(cap) < state.n
+    D = jnp.where(live[:, None] & live[None, :],
+                  state.D[slots][:, slots], BIG)
+    return RegStreamState(view.X, view.y, D, view.nbr_d, view.nbr_y,
+                          state.n, view.head, view.aid, view.wrap,
+                          view.nbr_a)
+
+
+def arrival_stats(state: RegStreamState, *, k):
+    """Arrival-ordered (X, y, a_prime, upd, kth, kth_label, live) — the
+    one shared gather behind every regression read path.
+
+    The per-row derived statistics are computed *in slot space* on the
+    raw leaves — the exact expressions of the historic linear path and
+    of ``fit`` — and only then gathered into arrival order. The
+    optimization barrier between the arithmetic and the gather pins the
+    fusion boundary: XLA compiles the reduce+divide+subtract chain in
+    its own small computation (the shape in which its accumulation
+    order matches ``fit``'s — a big consumer graph can re-vectorize the
+    reduce and round odd lanes 1 ulp apart), and the gathers after the
+    barrier are bit-preserving moves. This is what keeps the served
+    reads bit-identical to the batch path regardless of the surrounding
+    graph (session jit or the engine's mapped jit). Rows beyond ``n``
+    carry the linear layout's inert fills.
+    """
+    cap = state.capacity
+    a_prime_s = state.y - jnp.sum(state.nbr_y, axis=1) / k
+    upd_s = a_prime_s + state.nbr_y[:, -1] / k
+    a_prime_s, upd_s = jax.lax.optimization_barrier((a_prime_s, upd_s))
+    slots = ring_slots(cap, state.head, state.wrap)
+    live = jnp.arange(cap) < state.n
+    X = jnp.where(live[:, None], state.X[slots], 0.0)
+    y = jnp.where(live, state.y[slots], 0.0)
+    a_prime = jnp.where(live, a_prime_s[slots], 0.0)
+    upd = jnp.where(live, upd_s[slots], 0.0)
+    kth = jnp.where(live, state.nbr_d[:, -1][slots], BIG)
+    kth_label = jnp.where(live, state.nbr_y[:, -1][slots], 0.0)
+    return X, y, a_prime, upd, kth, kth_label, live
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
 def state_view(state: RegStreamState, *, k) -> KnnRegState:
     """The capacity-padded ``KnnRegState`` this stream state encodes.
 
-    Live rows carry exactly ``regression.fit``'s bits (once n >= k);
-    inert rows are garbage and must be masked by the reader. Jitted on
+    Rows come out in arrival order (ring gathered); live rows carry
+    exactly ``regression.fit``'s bits (once n >= k); rows beyond ``n``
+    are inert fills and must be masked by the reader. Jitted on
     purpose: ``fit`` computes ``a_prime`` inside jit, and XLA's fused
     sum/divide/subtract rounds differently from the eager op-by-op
-    dispatch — bit-parity needs the same compilation path.
+    dispatch — bit-parity needs the same compilation path; see
+    ``arrival_stats`` for why the stats are computed in slot space
+    behind an optimization barrier.
     """
-    a_prime = state.y - jnp.sum(state.nbr_y, axis=1) / k
-    return KnnRegState(state.X, state.y, a_prime,
-                       state.nbr_d[:, -1], state.nbr_y[:, -1])
+    X, y, a_prime, _, kth_d, kth_y, _ = arrival_stats(state, k=k)
+    return KnnRegState(X, y, a_prime, kth_d, kth_y)
+
+
+def _own_list(state: RegStreamState, d_row, y2, y_new, *, k):
+    """The new point's own (distances, labels) k-NN list, plus the
+    arrival-order top-k index set that produced it.
+
+    ``fit`` breaks equal-distance ties toward the earliest arrival, so
+    the top_k must run over the distance row in *arrival* order — under
+    the ring layout that is a gather through ``ring_slots``, with labels
+    masked to the linear path's inert 0 beyond ``n`` (garbage labels of
+    stale slots must not leak into the degenerate n < k sums).
+    Returns ``(own_d, own_y, y_sel, own_a)`` where ``y_sel`` are the
+    selected *pre-learn* labels (the pricing path's ``a`` statistic) and
+    ``own_a`` the selected neighbours' arrival ids (0 at BIG slots).
+    """
+    cap = state.capacity
+    slots = ring_slots(cap, state.head, state.wrap)
+    pos_live = jnp.arange(cap) < state.n
+    # the explicit mask scrubs rank >= wrap alias positions; at ranks in
+    # [n, wrap) the gathered row is already BIG, so this is bit-neutral
+    d_arr = jnp.where(pos_live, d_row[slots], BIG)
+    y_arr = jnp.where(pos_live, y2[slots], 0.0)
+    y_pre = jnp.where(pos_live, state.y[slots], 0.0)
+    a_arr = jnp.where(pos_live, state.aid[slots], 0)
+    own_neg, own_idx = jax.lax.top_k(-d_arr, k)
+    own_d = -own_neg
+    own_y = y_arr[own_idx]
+    # missing-neighbour slots carry the row's own label (fit convention:
+    # at n == k the one BIG entry is the masked self-diagonal) and the
+    # neutral arrival id 0
+    own_y = jnp.where(own_d >= BIG, y_new, own_y)
+    own_a = jnp.where(own_d >= BIG, 0, a_arr[own_idx]).astype(jnp.int32)
+    return own_d, own_y, y_pre[own_idx], own_a
 
 
 def _observe(state: RegStreamState, x_new, y_new, *, k):
     """Learn one example in O(cap k): the paper's incremental update.
 
     Returns ``(new_state, d_row)`` — ``d_row`` is the (cap,) vector of
-    distances from ``x_new`` to each live row (BIG on inert rows), for
+    distances from ``x_new`` to each live slot (BIG elsewhere), for
     callers that price the point before learning it (``session.observe``).
-    Precondition: n < capacity (callers grow or evict first).
+    The new point lands at ring slot ``(head + n) % wrap``.
+    Precondition: n < wrap (callers grow or evict first).
     """
-    idx = state.n
+    cap = state.capacity
+    idx = _mod_cap(state.head + state.n, state.wrap)
     y_new = jnp.asarray(y_new, state.y.dtype)
 
     # fused distance row + gated ordered merge into every live row's
@@ -127,21 +301,19 @@ def _observe(state: RegStreamState, x_new, y_new, *, k):
     # the row's own label), so streaming bits vs ``fit`` are unchanged
     d_row, nbr_d, nbr_y = kops.stream_update(
         state.X, state.y, state.nbr_d, state.nbr_y, x_new, y_new,
-        state.n, mode="reg")
+        state.n, mode="reg", head=state.head, wrap=state.wrap)
+    new_aid = _next_aid(state.aid, state.head, state.n, state.wrap)
+    live = ring_live(cap, state.head, state.n, state.wrap)
+    enters = live & (d_row < state.nbr_d[:, -1])
+    cand_d = jnp.where(enters, d_row, BIG)
+    nbr_a = _merge_aid(state.nbr_d, state.nbr_a, cand_d, new_aid, nbr_d)
     # one row + one column of D: under a donating jit these two updates
     # lower to in-place dynamic-update-slices — O(cap) HBM traffic, not
     # an O(cap^2) copy of the matrix
     D = state.D.at[idx, :].set(d_row).at[:, idx].set(d_row)
 
-    # the new row's own list: top_k over its distance row (BIG at self),
-    # exactly fit's per-row computation
     y2 = state.y.at[idx].set(y_new)
-    own_neg, own_idx = jax.lax.top_k(-d_row, k)
-    own_d = -own_neg
-    own_y = y2[own_idx]
-    # missing-neighbour slots carry the row's own label (fit convention:
-    # at n == k the one BIG entry is the masked self-diagonal)
-    own_y = jnp.where(own_d >= BIG, y_new, own_y)
+    own_d, own_y, _, own_a = _own_list(state, d_row, y2, y_new, k=k)
 
     new_state = RegStreamState(
         X=state.X.at[idx].set(x_new),
@@ -150,6 +322,10 @@ def _observe(state: RegStreamState, x_new, y_new, *, k):
         nbr_d=nbr_d.at[idx].set(own_d),
         nbr_y=nbr_y.at[idx].set(own_y),
         n=state.n + 1,
+        head=state.head,
+        aid=state.aid.at[idx].set(new_aid),
+        wrap=state.wrap,
+        nbr_a=nbr_a.at[idx].set(own_a),
     )
     return new_state, d_row
 
@@ -165,52 +341,67 @@ observe_donated = functools.partial(
 
 
 def _evict(state: RegStreamState, i, *, k) -> RegStreamState:
-    """Forget live row ``i`` in O(cap^2) worst case: decremental update.
+    """Forget the i-th *oldest* live point in O(cap^2) worst case.
 
     Only rows whose k-NN list contained the evicted point are touched;
     each is recomputed from the stored exact distances, so the result is
-    bit-exact vs refitting on the remaining window. Rows above ``i`` are
-    compacted down by one (arrival order preserved, so top_k's
-    lower-index-first tie rule keeps matching ``fit`` on the window).
-    ``i`` may be traced. Precondition: 0 <= i < n (callers guard; under
-    vmap+select the skipped lanes compute discarded garbage).
+    bit-exact vs refitting on the remaining window. The general arbitrary
+    -index form keeps the historic full recompute: the survivors are
+    gathered into linear arrival order (one O(cap^2) permutation of
+    ``D`` — arbitrary mid-window forgetting has no O(cap) repair), so
+    the output is a normalized head == 0 state. ``i`` counts arrival
+    rank (0 = oldest) and may be traced. Precondition: 0 <= i < n
+    (callers guard; under vmap+select the skipped lanes compute
+    discarded garbage).
     """
     cap = state.capacity
     i = jnp.asarray(i, jnp.int32)
-    live = jnp.arange(cap) < state.n
+    slot_i = _mod_cap(state.head + i, state.wrap)
 
     # rows whose list held the evicted point: d(r, i) <= kth. The evicted
-    # index may sit anywhere, so on ties we cannot tell membership from
-    # the distance alone — recompute conservatively (recompute is exact).
-    dcol = state.D[:, i]
-    affected = live & (dcol <= state.nbr_d[:, -1])
+    # point may sit anywhere in arrival order, so on ties we cannot tell
+    # membership from the distance alone — recompute conservatively
+    # (recompute is exact).
+    dcol = state.D[:, slot_i]
+    affected = (ring_live(cap, state.head, state.n, state.wrap)
+                & (dcol <= state.nbr_d[:, -1]))
 
-    # compact rows > i down by one (gather; index cap-1 maps to itself and
-    # is overwritten by the inert fill below)
-    perm = jnp.arange(cap) + (jnp.arange(cap) >= i)
-    perm = jnp.minimum(perm, cap - 1)
+    # survivor slots in arrival order, rank i dropped (gather; the last
+    # rank maps to itself and is overwritten by the inert fill below)
+    ar = jnp.arange(cap, dtype=jnp.int32)
+    ar = jnp.minimum(ar + (ar >= i), cap - 1)
+    slots = ring_slots(cap, state.head, state.wrap)[ar]
     n2 = state.n - 1
     live2 = jnp.arange(cap) < n2
 
-    Xs = jnp.where(live2[:, None], state.X[perm], 0.0)
-    ys = jnp.where(live2, state.y[perm], 0.0)
-    Ds = state.D[perm][:, perm]
+    Xs = jnp.where(live2[:, None], state.X[slots], 0.0)
+    ys = jnp.where(live2, state.y[slots], 0.0)
+    Ds = state.D[slots][:, slots]
     Ds = jnp.where(live2[:, None] & live2[None, :], Ds, BIG)
-    nbr_ds = jnp.where(live2[:, None], state.nbr_d[perm], BIG)
-    nbr_ys = jnp.where(live2[:, None], state.nbr_y[perm], 0.0)
-    aff = live2 & affected[perm]
+    nbr_ds = jnp.where(live2[:, None], state.nbr_d[slots], BIG)
+    nbr_ys = jnp.where(live2[:, None], state.nbr_y[slots], 0.0)
+    nbr_as = jnp.where(live2[:, None], state.nbr_a[slots], 0)
+    aids = jnp.where(live2, state.aid[slots], 0)
+    aff = live2 & affected[slots]
 
     # backfill affected rows: exact k-best straight from the stored
-    # distances (the diagonal and inert entries are already BIG)
+    # distances (the diagonal and inert entries are already BIG); rows
+    # are now in arrival order, so top_k's lowest-index tie rule IS
+    # fit's earliest-arrival rule
     neg, idxm = jax.lax.top_k(-Ds, k)
     rec_d = -neg
     rec_y = ys[idxm]
     rec_y = jnp.where(rec_d >= BIG, ys[:, None], rec_y)
+    rec_a = jnp.where(rec_d >= BIG, 0, aids[idxm]).astype(jnp.int32)
     return RegStreamState(
         X=Xs, y=ys, D=Ds,
         nbr_d=jnp.where(aff[:, None], rec_d, nbr_ds),
         nbr_y=jnp.where(aff[:, None], rec_y, nbr_ys),
         n=n2,
+        head=jnp.zeros((), jnp.int32),
+        aid=aids,
+        wrap=jnp.int32(cap),
+        nbr_a=jnp.where(aff[:, None], rec_a, nbr_as),
     )
 
 
@@ -221,75 +412,41 @@ evict_donated = functools.partial(
 
 
 def _evict_oldest(state: RegStreamState, *, k) -> RegStreamState:
-    """Sliding-window form: forget the oldest live point (row 0).
+    """Sliding-window form: forget the oldest live point, O(cap).
 
-    Specialization of ``evict`` that skips the full top_k recompute:
-    the evicted point has the LOWEST arrival index, so on distance ties
-    it sorts first — if it is in a row's k-NN list at all it occupies
-    the first slot holding its distance, and the repair is an O(k) drop
-    + one backfill. The backfill value comes by multiset rank over the
-    stored distances (see ``serving.session.evict_oldest``); its *label*
-    is the (r+1)-th lowest-indexed candidate at that distance, where
-    r counts the list's surviving occurrences of the value — exactly
-    fit's ties-toward-lower-index order, so the result stays bit-exact
-    vs refit (property-tested). Replaces an O(cap^2 log k) top_k with a
-    few O(cap^2) masked reductions — the sliding-window hot path.
+    Specialization of ``evict`` that skips both the full top_k recompute
+    *and* any positional movement: the evicted point has the EARLIEST
+    arrival, so on distance ties it sorts first — if it is in a row's
+    k-NN list at all it occupies the first slot holding its distance,
+    and the repair is an O(k) drop + one backfill. The backfill value
+    comes by multiset rank over the stored distances, and its *label*
+    is the next-earliest-arrival candidate at that distance, arrival
+    order read from the stored ``aid``s (``core.online.drop_backfill``)
+    — exactly fit's ties-toward-earliest order, so the result stays
+    bit-exact vs refit (property-tested). The ring head then advances:
+    no leaf is shifted, the stale slot is simply masked out of every
+    later read.
     Precondition: n >= 1 (guarded by callers; under vmap+select the n=0
     lanes compute garbage that the caller's select discards).
     """
     cap = state.capacity
-    live = jnp.arange(cap) < state.n
-    dcol = state.D[:, 0]
+    head = state.head
+    dcol = state.D[:, head]
     kth = state.nbr_d[:, -1]
-    affected = live & (dcol <= kth)
-
-    def shift(a, fill):
-        return jnp.concatenate([a[1:], jnp.full_like(a[:1], fill)], axis=0)
-
-    Xs = shift(state.X, 0)
-    ys = shift(state.y, 0)
-    Ds = shift(state.D, BIG)
-    Ds = jnp.concatenate(
-        [Ds[:, 1:], jnp.full_like(Ds[:, :1], BIG)], axis=1)
-    L = shift(state.nbr_d, BIG)
-    Ly = shift(state.nbr_y, 0)
-    aff = shift(affected, False)
-    es = shift(dcol, BIG)
-
+    head2 = _mod_cap(head + 1, state.wrap)
     n2 = state.n - 1
-    live2 = jnp.arange(cap) < n2
+    live2 = ring_live(cap, head2, n2, state.wrap)  # survivors only
+    affected = live2 & (dcol <= kth)
+
     cand = live2[None, :]  # self-distances are BIG on the diagonal
-    nbr_d2, nbr_y2 = _drop_backfill_labeled(L, Ly, es, cand, Ds, ys, aff,
-                                            k=k)
+    nbr_d2, nbr_y2, nbr_a2 = drop_backfill(
+        state.nbr_d, dcol, cand, state.D, affected, k=k,
+        Ly=state.nbr_y, La=state.nbr_a, ys=state.y, aid=state.aid,
+        age=ring_age(cap, head2, state.wrap),
+        slots=ring_slots(cap, head2, state.wrap), aid0=state.aid[head])
     return RegStreamState(
-        X=Xs, y=ys, D=Ds, nbr_d=nbr_d2, nbr_y=nbr_y2, n=n2)
-
-
-def _drop_backfill_labeled(L, Ly, es, cand, Ds, ys, aff, *, k):
-    """Repair each (distance, label) list flagged in ``aff``: the shared
-    distance repair (``core.online.drop_backfill_core``) plus the label
-    bookkeeping — the backfill point's label follows fit's ties-toward-
-    lower-index order. Rows not flagged pass through untouched.
-    """
-    newL, pos0, cols, b, tprime, mprime = drop_backfill_core(
-        L, es, cand, Ds, k=k)
-
-    # the backfill label: among candidates at distance b (in index
-    # order) skip the r occurrences the surviving list already holds —
-    # they are the r lowest-indexed ones, fit's tie order
-    r = jnp.where(b == tprime, mprime, 0)
-    mask_b = cand & (Ds == b[:, None])
-    csum = jnp.cumsum(mask_b.astype(jnp.int32), axis=1)
-    pick = mask_b & (csum == r[:, None] + 1)
-    yb = ys[jnp.argmax(pick, axis=1)]  # b >= BIG rows fixed up below
-
-    Lyup = jnp.concatenate([Ly[:, 1:], Ly[:, :1]], axis=1)
-    newLy = jnp.where(cols[None, :] < pos0[:, None], Ly,
-                      jnp.where(cols[None, :] < k - 1, Lyup, yb[:, None]))
-    # missing-neighbour slots carry the row's own label (fit convention)
-    newLy = jnp.where(newL >= BIG, ys[:, None], newLy)
-    return (jnp.where(aff[:, None], newL, L),
-            jnp.where(aff[:, None], newLy, Ly))
+        X=state.X, y=state.y, D=state.D, nbr_d=nbr_d2, nbr_y=nbr_y2,
+        n=n2, head=head2, aid=state.aid, wrap=state.wrap, nbr_a=nbr_a2)
 
 
 evict_oldest = functools.partial(
@@ -322,6 +479,7 @@ def from_fit(X, y, *, k, capacity: int) -> RegStreamState:
                    capacity=int(capacity))
 
 
-__all__ = ["RegStreamState", "init", "state_view", "observe",
+__all__ = ["RegStreamState", "init", "state_view", "arrival_stats",
+           "observe",
            "observe_donated", "evict", "evict_donated", "evict_oldest",
-           "evict_oldest_donated", "from_fit"]
+           "evict_oldest_donated", "from_fit", "arrival_view", "to_linear"]

@@ -172,6 +172,8 @@ def _knn_regression_spec() -> MeasureSpec:
     from repro.regression import stream as rstream
 
     def _pad_one(state):
+        # registry states stay linear (head == 0, ring never wraps), so
+        # growing/shrinking capacity just tracks the ring modulus along
         return rstream.RegStreamState(
             X=jnp.pad(state.X, ((0, 1), (0, 0))),
             y=jnp.pad(state.y, (0, 1)),
@@ -180,12 +182,18 @@ def _knn_regression_spec() -> MeasureSpec:
                           constant_values=1e30),
             nbr_y=jnp.pad(state.nbr_y, ((0, 1), (0, 0))),
             n=state.n,
+            head=state.head,
+            aid=jnp.pad(state.aid, (0, 1)),
+            wrap=state.wrap + 1,
+            nbr_a=jnp.pad(state.nbr_a, ((0, 1), (0, 0))),
         )
 
     def _shrink_one(state):
         return rstream.RegStreamState(
             X=state.X[:-1], y=state.y[:-1], D=state.D[:-1, :-1],
-            nbr_d=state.nbr_d[:-1], nbr_y=state.nbr_y[:-1], n=state.n)
+            nbr_d=state.nbr_d[:-1], nbr_y=state.nbr_y[:-1], n=state.n,
+            head=state.head, aid=state.aid[:-1], wrap=state.wrap - 1,
+            nbr_a=state.nbr_a[:-1])
 
     def fit(X, y, hp):
         X = jnp.asarray(X, jnp.float32)

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.store import CheckpointStore
@@ -31,24 +32,91 @@ from repro.serving.session import Session
 
 
 def _like_from_manifest(manifest: dict):
-    """Zero-filled session pytree (possibly batched) matching the leaves.
+    """Zero-filled restore target (possibly batched) matching the leaves.
 
-    5 leaves = classification ``Session`` (X, y, best, n, D); 6 leaves =
-    regression ``RegStreamState`` (X, y, D, nbr_d, nbr_y, n).
+    8 leaves = classification ``Session`` (X, y, best, n, D, head, aid,
+    wrap); 10 leaves = regression ``RegStreamState`` (X, y, D, nbr_d,
+    nbr_y, n, head, aid, wrap, nbr_a). Pre-ring snapshots carried 5 / 6
+    leaves (no ring bookkeeping); they restore into a plain leaf list
+    that ``_from_legacy`` upgrades to a linear-layout ring state.
     """
     specs = manifest["leaves"]
-    if len(specs) == 5:
-        X, y, best, n, D = (
-            jnp.zeros(tuple(s["shape"]), dtype=s["dtype"]) for s in specs)
-        return Session(OnlineKnnState(X, y, best, n), D)
-    if len(specs) == 6:
-        X, y, D, nbr_d, nbr_y, n = (
-            jnp.zeros(tuple(s["shape"]), dtype=s["dtype"]) for s in specs)
-        return RegStreamState(X, y, D, nbr_d, nbr_y, n)
+    zeros = [jnp.zeros(tuple(s["shape"]), dtype=s["dtype"]) for s in specs]
+    if len(specs) in (5, 6):
+        return zeros  # legacy linear snapshot: synthesized below
+    if len(specs) == 8:
+        X, y, best, n, D, head, aid, wrap = zeros
+        return Session(OnlineKnnState(X, y, best, n), D, head, aid, wrap)
+    if len(specs) == 10:
+        return RegStreamState(*zeros)
     raise ValueError(
-        f"snapshot has {len(specs)} leaves; expected 5 (classification "
-        "Session) or 6 (regression RegStreamState) — not a serving "
-        "snapshot?")
+        f"snapshot has {len(specs)} leaves; expected 8 (classification "
+        "Session), 10 (regression RegStreamState), or the legacy 5/6 "
+        "linear forms — not a serving snapshot?")
+
+
+def _from_legacy(leaves):
+    """Upgrade a pre-ring linear snapshot to the ring layout.
+
+    The legacy layout was arrival-ordered rows [0, n): exactly a ring at
+    head == 0 with a full-capacity modulus and positional arrival ids.
+    The regression neighbour-arrival-id lists (which the legacy format
+    never stored) are reconstructed exactly from the saved distance
+    matrix: per row, a ties-toward-lowest-index top-k — fit's tie rule,
+    which positional storage realized by construction.
+    """
+    if len(leaves) == 5:
+        X, y, best, n, D = leaves
+    else:
+        X, y, D, nbr_d, nbr_y, n = leaves
+    cap = D.shape[-1]
+    head = jnp.zeros_like(n)
+    pos = jnp.broadcast_to(jnp.arange(cap, dtype=jnp.int32), y.shape)
+    live = pos < jnp.asarray(n)[..., None]
+    aid = jnp.where(live, pos, 0).astype(jnp.int32)
+    wrap = jnp.full_like(n, cap)
+    if len(leaves) == 5:
+        return Session(OnlineKnnState(X, y, best, n), D, head, aid, wrap)
+
+    k = nbr_d.shape[-1]
+
+    def rebuild_nbr_a(Di):
+        neg, idxm = jax.lax.top_k(-Di, k)
+        return jnp.where(-neg >= 1e30, 0, idxm).astype(jnp.int32)
+
+    fn = rebuild_nbr_a
+    for _ in range(D.ndim - 2):
+        fn = jax.vmap(fn)
+    nbr_a = fn(D)
+    return RegStreamState(X, y, D, nbr_d, nbr_y, n, head, aid, wrap,
+                          nbr_a)
+
+
+def _fit_ring_modulus(engine, state):
+    """Align a restored state's ring modulus with the target engine.
+
+    A pre-ring (legacy) snapshot restores with a full-capacity modulus;
+    a sliding engine runs its ring inside the ``[:window]`` block. The
+    two agree whenever the state is unwrapped (head == 0) and fits the
+    window — then the modulus can simply be re-pinned. Anything else is
+    a real mismatch and is left for ``check_window_occupancy`` to
+    reject with its diagnostic.
+    """
+    if engine._wmax is None:
+        return state
+    wrap = jnp.asarray(state.wrap)
+    if (int(jnp.max(wrap)) == engine._wmax
+            and int(jnp.min(wrap)) == engine._wmax):
+        return state
+    n = state.n if isinstance(state, RegStreamState) else state.knn.n
+    if int(jnp.max(state.head)) != 0 or int(jnp.max(n)) > engine._wmax:
+        return state  # genuinely incompatible; the engine check reports
+    new_wrap = jnp.full_like(wrap, engine._wmax)
+    if isinstance(state, RegStreamState):
+        return RegStreamState(state.X, state.y, state.D, state.nbr_d,
+                              state.nbr_y, state.n, state.head, state.aid,
+                              new_wrap, state.nbr_a)
+    return Session(state.knn, state.D, state.head, state.aid, new_wrap)
 
 
 class SessionStore:
@@ -79,6 +147,8 @@ class SessionStore:
         manifest = self._store.read_manifest(step)
         like = _like_from_manifest(manifest)
         state, step = self._store.restore(like, step)
+        if isinstance(state, list):  # legacy 5/6-leaf linear snapshot
+            state = _from_legacy(state)
         return state, step, manifest.get("extra", {})
 
     def restore_engine(self, step: int | None = None):
@@ -110,8 +180,11 @@ class SessionStore:
             "dim": int(X.shape[-1]),
         }
         if regression:
-            return RegressionServingEngine.from_meta(meta), state, step
-        return ServingEngine.from_meta(meta), state, step
+            engine = RegressionServingEngine.from_meta(meta)
+        else:
+            engine = ServingEngine.from_meta(meta)
+        state = _fit_ring_modulus(engine, state)
+        return engine, state, step
 
 
 __all__ = ["SessionStore"]

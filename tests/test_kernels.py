@@ -132,6 +132,45 @@ def test_stream_update_matches_ref(cap, p, k, n, mode):
                                       err_msg="fast " + name)
 
 
+@pytest.mark.parametrize("cap,k,n,head,wrap", [
+    (64, 5, 40, 30, 64),   # wrapped over the full capacity
+    (64, 3, 20, 15, 24),   # window-confined ring: slots >= wrap inert
+    (70, 4, 24, 23, 24),   # full confined ring, head mid-block
+    (32, 2, 0, 7, 16),     # empty ring, nonzero head
+])
+@pytest.mark.parametrize("mode", ["class", "reg"])
+def test_stream_update_ring_mode_matches_ref(cap, k, n, head, wrap, mode):
+    """Ring-slot liveness (head/wrap) in the fused kernel vs the oracle:
+    the live window is slots (head + i) % wrap, everything else inert."""
+    p = 6
+    ks = jax.random.split(jax.random.PRNGKey(3 * cap + head), 6)
+    X = jax.random.normal(ks[0], (cap, p), jnp.float32)
+    y = jax.random.randint(ks[1], (cap,), 0, 3, jnp.int32)
+    nbr_d = jnp.sort(
+        jax.random.uniform(ks[2], (cap, k), jnp.float32, 0.1, 3.0), axis=1)
+    nbr_y = jax.random.normal(ks[3], (cap, k), jnp.float32)
+    x_new = jax.random.normal(ks[4], (p,), jnp.float32)
+    if mode == "class":
+        y_in, y_new = y, jnp.int32(1)
+    else:
+        y_in, y_new = jax.random.normal(ks[5], (cap,), jnp.float32), \
+            jnp.float32(0.25)
+    args = (X, y_in, nbr_d, nbr_y, x_new, y_new, jnp.int32(n))
+    kw = dict(mode=mode, head=jnp.int32(head), wrap=jnp.int32(wrap))
+    got = su_pallas(*args, block_n=32, interpret=True, **kw)
+    want = ref.stream_update(*args, **kw)
+    fast = ref.stream_update_fast(*args, **kw)
+    for g, f, w, name in zip(got, fast, want, ["d_row", "nbr_d", "nbr_y"]):
+        g, f, w = np.asarray(g), np.asarray(f), np.asarray(w)
+        np.testing.assert_array_equal(f, w, err_msg="fast " + name)
+        big = w >= 1e29
+        np.testing.assert_array_equal(g[big], w[big], err_msg=name)
+        np.testing.assert_allclose(g[~big], w[~big], atol=1e-5, rtol=1e-5,
+                                   err_msg=name)
+    # liveness itself: exactly n slots carry finite distances
+    assert int(np.sum(np.asarray(want[0]) < 1e29)) == n
+
+
 @pytest.mark.parametrize("mode", ["class", "reg"])
 def test_stream_update_tie_rule_exact(mode):
     """Distance ties: the kernel's branch-free insert-after-equals must

@@ -45,12 +45,15 @@ def _fill(state, X, y, k, lo=0, hi=None):
 
 
 def _assert_state_matches_fit(state, Xw, yw, k):
-    """Streaming statistics == regression.fit bits on the live window."""
+    """Streaming statistics == regression.fit bits on the live window.
+
+    ``state_view`` gathers the ring into arrival order, so the checks
+    below are layout-independent (wrapped rings included)."""
     n = int(state.n)
     assert n == Xw.shape[0]
     fit = reg.fit(jnp.asarray(Xw), jnp.asarray(yw), k=k)
     view = rstream.state_view(state, k=k)
-    np.testing.assert_array_equal(np.asarray(state.X)[:n], np.asarray(Xw))
+    np.testing.assert_array_equal(np.asarray(view.X)[:n], np.asarray(Xw))
     np.testing.assert_array_equal(
         np.asarray(view.a_prime)[:n], np.asarray(fit.a_prime))
     np.testing.assert_array_equal(
@@ -280,9 +283,13 @@ def test_engine_vmapped_step_equals_sequential_sessions_bitwise():
                 sl, jnp.asarray(X[t]), jnp.asarray(y[t]),
                 jnp.float32(taus[t][s]), jnp.int32(w), k=k)
             assert float(p) == pvals[s, t]
-        np.testing.assert_array_equal(np.asarray(sl.nbr_d),
-                                      np.asarray(
-            jax.tree_util.tree_map(lambda a: a[s], state).nbr_d))
+        # the engine ring is confined to the [:window] block while the
+        # standalone session rings over the full capacity — identical
+        # windows, different slot layouts, so compare normalized
+        lane = jax.tree_util.tree_map(lambda a: a[s], state)
+        np.testing.assert_array_equal(
+            np.asarray(rstream.to_linear(sl).nbr_d),
+            np.asarray(rstream.to_linear(lane).nbr_d))
 
 
 def test_engine_grow_mode_doubles_and_stays_exact():

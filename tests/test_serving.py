@@ -55,9 +55,17 @@ def test_session_observe_matches_run_stream_bitwise():
                                   np.array(got, np.float32))
 
 
+def _assert_linear_equal(a, b):
+    """Leaf-for-leaf bitwise equality after ring normalization."""
+    for la, lb in zip(jax.tree_util.tree_leaves(sm.to_linear(a)),
+                      jax.tree_util.tree_leaves(sm.to_linear(b))):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
 @pytest.mark.parametrize("seed,evictions", [(1, 1), (2, 9), (3, 17)])
 def test_evict_plus_readd_equals_fit_from_scratch(seed, evictions):
-    """Eviction then incremental re-add == fresh fit on the same window."""
+    """Eviction then incremental re-add == fresh fit on the same window
+    (leaf-for-leaf through the ring normalization, D and aid included)."""
     T, cap = 36, 64
     X, y, taus = _stream(T, seed=seed)
     sess, _ = _fill(sm.init(cap, DIM, K), X, y, taus, hi=T - 5)
@@ -68,10 +76,7 @@ def test_evict_plus_readd_equals_fit_from_scratch(seed, evictions):
     scratch, _ = _fill(sm.init(cap, DIM, K), X, y, taus, lo=evictions)
     n = int(sess.knn.n)
     assert n == T - evictions == int(scratch.knn.n)
-    np.testing.assert_array_equal(np.asarray(sess.knn.X),
-                                  np.asarray(scratch.knn.X))
-    np.testing.assert_array_equal(np.asarray(sess.knn.best),
-                                  np.asarray(scratch.knn.best))
+    _assert_linear_equal(sess, scratch)
     # and the *next* smoothed p-value agrees bitwise
     xq, yq, tq = X[0], y[0], jnp.float32(0.37)
     _, pa = sm.observe(sess, xq, yq, tq, k=K)
@@ -92,10 +97,7 @@ def test_evict_oldest_tie_heavy_bit_exact(seed):
     for e in range(T - K - 1):
         sess = sm.evict_oldest(sess, k=K)
         scratch, _ = _fill(sm.init(32, DIM, K), X, y, taus, lo=e + 1)
-        np.testing.assert_array_equal(np.asarray(sess.knn.best),
-                                      np.asarray(scratch.knn.best))
-        np.testing.assert_array_equal(np.asarray(sess.knn.X),
-                                      np.asarray(scratch.knn.X))
+        _assert_linear_equal(sess, scratch)
 
 
 def test_sliding_window_equals_refit_each_window():
@@ -107,8 +109,8 @@ def test_sliding_window_equals_refit_each_window():
                                    k=K)
     ref, _ = _fill(sm.init(cap, DIM, K), X, y, taus, lo=T - w)
     assert int(sl.knn.n) == w
-    np.testing.assert_array_equal(np.asarray(sl.knn.best),
-                                  np.asarray(ref.knn.best))
+    assert int(sl.head) == T - w  # eviction = head advance, no shift
+    _assert_linear_equal(sl, ref)
 
 
 def test_grow_preserves_state_bitwise():
