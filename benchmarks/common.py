@@ -7,17 +7,31 @@ import jax
 import numpy as np
 
 
-def timeit(fn, *args, repeats: int = 3, **kw):
-    """Median seconds per call, compile excluded (one warmup)."""
+def timeit_compiled(fn, *args, repeats: int = 3, **kw):
+    """(median steady seconds per call, first-call seconds).
+
+    The first call runs trace + compile + execute; its wall time is
+    returned separately (``compile_s``, an upper bound on compile cost)
+    instead of being silently discarded, so benches can report it as
+    its own column rather than folding it into — or hiding it from —
+    the steady-state numbers.
+    """
+    t0 = time.perf_counter()
     out = fn(*args, **kw)
     jax.block_until_ready(out)
+    compile_s = time.perf_counter() - t0
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         out = fn(*args, **kw)
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return float(np.median(ts)), compile_s
+
+
+def timeit(fn, *args, repeats: int = 3, **kw):
+    """Median seconds per call, compile excluded (one warmup)."""
+    return timeit_compiled(fn, *args, repeats=repeats, **kw)[0]
 
 
 def bench_sliding(make_engine, make_traffic, *, cap, chunk=32, reps=4):
@@ -56,7 +70,7 @@ def bench_sliding(make_engine, make_traffic, *, cap, chunk=32, reps=4):
                                         taus[lo:hi])
         return state
 
-    t = {}
+    t, comp = {}, {}
     for layout in ("ring", "compact", "grow"):
         if layout == "grow":
             # evict-free reference: occupancy just short of capacity,
@@ -64,8 +78,10 @@ def bench_sliding(make_engine, make_traffic, *, cap, chunk=32, reps=4):
             # the capacity-doubling growth (which would retrace)
             eng = make_engine("ring", None)
             warm = eng.init_state()
+            t0 = time.perf_counter()
             warm, p = eng.observe_many(warm, x2, y2, t2)  # compile
             jax.block_until_ready(p)
+            comp[layout] = time.perf_counter() - t0
             del warm
             eng.reset_occupancy()
             state = prefill(cap - reps * chunk - 1)
@@ -74,8 +90,10 @@ def bench_sliding(make_engine, make_traffic, *, cap, chunk=32, reps=4):
             state = prefill(cap - chunk)
             # warmup chunk compiles AND fills the window to exactly cap,
             # so every timed tick below evicts
+            t0 = time.perf_counter()
             state, p = eng.observe_many(state, x2, y2, t2)
             jax.block_until_ready(p)
+            comp[layout] = time.perf_counter() - t0
         t0 = time.perf_counter()
         for _ in range(reps):
             state, p = eng.observe_many(state, x2, y2, t2)
@@ -94,6 +112,10 @@ def bench_sliding(make_engine, make_traffic, *, cap, chunk=32, reps=4):
         "session_steps_per_s_evictfree": sessions / t["grow"],
         "ring_speedup_vs_compact": t["compact"] / t["ring"],
         "evict_overhead_vs_evictfree": t["ring"] / t["grow"],
+        # first observe_many dispatch per layout: trace+compile+execute
+        "compile_s_ring": comp["ring"],
+        "compile_s_compact": comp["compact"],
+        "compile_s_grow": comp["grow"],
     }
 
 

@@ -22,15 +22,18 @@ import numpy as np
 
 
 def _timeit(fn, repeats=3):
+    """(median steady s, first-call s incl. compile, last output)."""
+    t0 = time.perf_counter()
     out = fn()
     jax.block_until_ready(out)
+    compile_s = time.perf_counter() - t0
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         out = fn()
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts)), out
+    return float(np.median(ts)), compile_s, out
 
 
 def run(ns=(512, 2048), *, m=8, dim=16, k=7, eps=0.1, sessions=4,
@@ -47,11 +50,11 @@ def run(ns=(512, 2048), *, m=8, dim=16, k=7, eps=0.1, sessions=4,
         y = jnp.asarray(y, jnp.float32)
         Xtr, ytr, Xt = X[:n], y[:n], X[n:]
 
-        t_std, iv_std = _timeit(lambda: reg.intervals_standard(
+        t_std, c_std, iv_std = _timeit(lambda: reg.intervals_standard(
             Xtr, ytr, Xt, k=k, epsilon=eps))
 
-        t_fit, state = _timeit(lambda: reg.fit(Xtr, ytr, k=k))
-        t_opt, iv_opt = _timeit(lambda: reg.intervals_optimized(
+        t_fit, c_fit, state = _timeit(lambda: reg.fit(Xtr, ytr, k=k))
+        t_opt, c_opt, iv_opt = _timeit(lambda: reg.intervals_optimized(
             state, Xt, k=k, epsilon=eps))
 
         # streaming engine: sessions tenants, each holding the same window
@@ -60,7 +63,8 @@ def run(ns=(512, 2048), *, m=8, dim=16, k=7, eps=0.1, sessions=4,
         one = rstream.from_fit(Xtr, ytr, k=k, capacity=n)
         st = jax.tree_util.tree_map(
             lambda a: jnp.broadcast_to(a, (sessions,) + a.shape), one)
-        t_serve, iv_serve = _timeit(lambda: eng.intervals(st, Xt, eps))
+        t_serve, c_serve, iv_serve = _timeit(
+            lambda: eng.intervals(st, Xt, eps))
 
         # engine observe throughput (sliding window, all tenants): the
         # per-tick path, then the same traffic chunked through
@@ -69,8 +73,10 @@ def run(ns=(512, 2048), *, m=8, dim=16, k=7, eps=0.1, sessions=4,
         xs = jax.random.normal(key, (obs_ticks, sessions, dim), jnp.float32)
         ys_ = jax.random.normal(key, (obs_ticks, sessions), jnp.float32)
         taus = eng.taus(key)
+        t0 = time.perf_counter()
         st2, _ = eng.observe(st, xs[0], ys_[0], taus)  # compile
         jax.block_until_ready(st2.n)
+        c_observe = time.perf_counter() - t0
         t0 = time.perf_counter()
         for t in range(1, obs_ticks):
             st2, p = eng.observe(st2, xs[t], ys_[t], taus)
@@ -81,9 +87,11 @@ def run(ns=(512, 2048), *, m=8, dim=16, k=7, eps=0.1, sessions=4,
         taus_many = jnp.broadcast_to(taus, (chunk, sessions))
         st3 = jax.tree_util.tree_map(
             lambda a: jnp.broadcast_to(a, (sessions,) + a.shape), one)
+        t0 = time.perf_counter()
         st3, _ = eng.observe_many(  # compile + warmup chunk
             st3, xs[:chunk], ys_[:chunk], taus_many)
         jax.block_until_ready(st3.n)
+        c_many = time.perf_counter() - t0
         t0 = time.perf_counter()
         st3, p = eng.observe_many(st3, xs[chunk:2 * chunk],
                                   ys_[chunk:2 * chunk], taus_many)
@@ -97,6 +105,12 @@ def run(ns=(512, 2048), *, m=8, dim=16, k=7, eps=0.1, sessions=4,
             "n": n, "m": m, "dim": dim, "k": k, "epsilon": eps,
             "sessions": sessions,
             "fit_wall_s": t_fit,
+            "fit_compile_s": c_fit,
+            "standard_compile_s": c_std,
+            "optimized_compile_s": c_opt,
+            "streaming_compile_s": c_serve,
+            "observe_compile_s": c_observe,
+            "observe_many_compile_s": c_many,
             "standard_s_per_test_point": per_std,
             "optimized_s_per_test_point": per_opt,
             "streaming_s_per_test_point": per_serve,
@@ -137,8 +151,10 @@ def run_sliding(caps=(256, 1024, 4096), *, dim=16, k=7, chunk=32, reps=4):
     from repro.regression import RegressionServingEngine
 
     try:  # package import (python -m benchmarks.run) or script run
+        from benchmarks import roofline
         from benchmarks.common import bench_sliding
     except ImportError:  # executed as a script: benchmarks/ is on sys.path
+        import roofline
         from common import bench_sliding
 
     rows = []
@@ -159,12 +175,20 @@ def run_sliding(caps=(256, 1024, 4096), *, dim=16, k=7, chunk=32, reps=4):
 
         row = bench_sliding(mk, traffic, cap=cap, chunk=chunk, reps=reps)
         row.update(dim=dim, k=k)
+        # distance from the measured memory-bandwidth roof
+        bw = roofline.measure_bandwidth()
+        nbytes = roofline.sliding_tick_bytes(sessions, cap, dim)
+        row["mem_bandwidth_bytes_per_s"] = bw
+        row["sliding_tick_bytes_model"] = nbytes
+        row["mem_roof_fraction"] = (
+            (nbytes / bw) * row["session_steps_per_s_sliding"] / sessions)
         rows.append(row)
         print(f"[regression_bench] sliding S={sessions} cap={cap:5d} "
               f"ring {row['session_steps_per_s_sliding']:8.0f}/s  "
               f"compact {row['session_steps_per_s_sliding_compact']:8.0f}/s"
               f"  ({row['ring_speedup_vs_compact']:.2f}x)  "
-              f"evict-free {row['session_steps_per_s_evictfree']:8.0f}/s")
+              f"evict-free {row['session_steps_per_s_evictfree']:8.0f}/s  "
+              f"roof {100 * row['mem_roof_fraction']:.0f}%")
     return rows
 
 

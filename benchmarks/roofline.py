@@ -20,6 +20,57 @@ from repro.analysis.hlo import model_flops_per_step, roofline_terms
 RESULTS = os.path.join(os.path.dirname(__file__), "..",
                        "dryrun_results.json")
 
+_BW_CACHE: dict = {}
+
+
+def measure_bandwidth(nbytes: int = 1 << 26, repeats: int = 5) -> float:
+    """Measured streaming memory bandwidth (bytes/s) of this backend.
+
+    Times a jitted elementwise add over an ``nbytes`` f32 buffer after
+    compile (read N + write N bytes per call, best of ``repeats``) —
+    the empirical roof the sliding-tick benches are compared against,
+    instead of a hard-coded TPU constant that is meaningless on the CPU
+    containers the benches actually run on. Cached per process.
+    """
+    if nbytes in _BW_CACHE:
+        return _BW_CACHE[nbytes]
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    n = nbytes // 4
+    x = jnp.arange(n, dtype=jnp.float32)
+    f = jax.jit(lambda a: a + 1.0)
+    jax.block_until_ready(f(x))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        y = f(x)
+        jax.block_until_ready(y)
+        ts.append(time.perf_counter() - t0)
+    bw = 2 * n * 4 / min(ts)
+    _BW_CACHE[nbytes] = bw
+    return bw
+
+
+def sliding_tick_bytes(sessions: int, cap: int, dim: int,
+                       dtype_bytes: int = 4) -> int:
+    """Post-fusion traffic model (bytes) for one window-full sliding tick.
+
+    Per session the decremental-evict + incremental-observe tick must
+    stream the (cap, cap) pairwise-distance block once (the neighbour
+    repair scans it; the donated row/col update rewrites O(cap) of it)
+    plus O(cap) feature rows and bookkeeping vectors. This is a *lower*
+    bound — achieved time over this model's roof time is the
+    "distance from the memory-bandwidth roof" the sliding rows report.
+    Fractions above 1 mean the working set is cache-resident (the
+    effective bandwidth beats the streaming-DRAM roof — expected on the
+    CPU containers for small capacities).
+    """
+    per_session = cap * cap + cap * (dim + 16)
+    return sessions * per_session * dtype_bytes
+
 
 def derive(cell: dict) -> dict:
     chips = 512 if cell["mesh"] == "2x16x16" else 256

@@ -34,7 +34,9 @@ def main(argv=None) -> int:
                 f"ring={r['session_steps_per_s_sliding']:.0f}/s "
                 f"compact={r['session_steps_per_s_sliding_compact']:.0f}/s "
                 f"ring_vs_compact={r['ring_speedup_vs_compact']:.2f}x "
-                f"evictfree={r['session_steps_per_s_evictfree']:.0f}/s")
+                f"evictfree={r['session_steps_per_s_evictfree']:.0f}/s "
+                f"mem_roof={100 * r['mem_roof_fraction']:.0f}% "
+                f"compile={r['compile_s_ring']:.2f}s")
             for r in fn(caps)]
 
     suites = {
@@ -67,6 +69,15 @@ def main(argv=None) -> int:
         "reg_sliding": lambda: _sliding_rows(
             regression_bench.run_sliding, "regression",
             (256,) if args.quick else (256, 1024)),
+        # telemetry-instrumentation cost on the chunked hot path (the
+        # 5% budget CI gates on BENCH_serve.json)
+        "serve_overhead": lambda: [
+            row("serve/overhead",
+                f"S={r['sessions']},cap={r['capacity']}",
+                r["observe_many_s_instrumented"] / r["chunk"],
+                f"overhead={100 * r['instrumentation_overhead_frac']:+.1f}"
+                f"% plain={r['observe_many_s_plain'] * 1e3:.2f}ms")
+            for r in serve_bench.run_overhead()],
         "roofline": lambda: roofline.run(mesh_filter=None),
     }
     only = set(args.only.split(",")) if args.only else set(suites)

@@ -17,21 +17,37 @@ import jax
 import jax.numpy as jnp
 
 
-def scan_chunk(vstep):
+def scan_chunk(vstep, stats_fn=None):
     """Wrap a vmapped per-tick step into a T-tick ``lax.scan`` chunk.
 
     One jitted dispatch advances T ticks; the leading-axis chunk length
     is the only retrace axis (the scan is rolled). Donating the carry at
     the jit boundary makes every per-tick (cap, cap) row/column insert
     an in-place dynamic-update-slice.
+
+    ``stats_fn`` (optional — the telemetry hook, built by
+    ``telemetry.device.make_chunk_stats_fn``) is evaluated ONCE per
+    chunk, on the pre-chunk state and the full (T, S) active mask,
+    *outside* the scan body — the tick statistics are a closed form of
+    the integer bookkeeping leaves (occupancy / ring head / modulus)
+    and the active mask, and even a few extra ops inside the compiled
+    per-tick loop measure as a several-% regression. The chunk then
+    returns ``(state, (pvals, stats))`` with ``stats`` one int32
+    vector. The stats never read the float state, so the step's
+    p-values and state stay bit-identical to the uninstrumented chunk
+    (tested) and the donated in-place (cap, cap) updates are
+    unaffected.
     """
     def chunk(state, xs, ys, taus, windows, actives):
+        if stats_fn is not None:
+            st = stats_fn(state, windows, actives)
+
         def body(s, inp):
             x, y, tau, act = inp
-            s2, p = vstep(s, x, y, tau, windows, act)
-            return s2, p
+            return vstep(s, x, y, tau, windows, act)
 
-        return jax.lax.scan(body, state, (xs, ys, taus, actives))
+        out, ps = jax.lax.scan(body, state, (xs, ys, taus, actives))
+        return (out, (ps, st)) if stats_fn is not None else (out, ps)
 
     return chunk
 

@@ -39,6 +39,16 @@ or no flags for bootstrap — its ensemble retrains on the live window
 every tick and re-conforms within a few ticks of a change. The
 sustained-drift detection demo is the vmapped engine mode above.)
 
+Every serving mode reports through one telemetry pipeline
+(``repro.telemetry``): per-op latency histograms, device-side tick
+counters and online validity monitors (rolling coverage vs 1-eps,
+p-value-uniformity KS, drift martingales) all render via the metrics
+text export. ``--metrics-out`` dumps the same snapshot as JSON and
+``--trace-out`` records one JSONL trace record per engine op::
+
+    python -m repro.launch.serve --sessions 8 --steps 64 \\
+        --metrics-out metrics.json --trace-out trace.jsonl
+
 Pipeline per batch of requests:
     1. prefill the prompt, build per-layer KV/recurrent caches,
     2. greedy decode ``gen_tokens`` steps with the serve_step,
@@ -76,33 +86,68 @@ def _class_drift_traffic(args, S, T, dim):
     return X, y, taus, drifted
 
 
-def _drift_report(pvals, drifted, threshold, *, use_max=False):
-    """Martingale drift report shared by all serving modes: per-tenant
-    log exchangeability-martingale lines + the flagged/injected summary.
+def _telemetry(args):
+    """One metrics registry + optional JSONL tracer per serving run."""
+    from repro.telemetry import MetricsRegistry, Tracer
 
-    ``use_max`` flags on the running maximum of log M (valid by Ville's
-    inequality) instead of the final value — the right read-out for
-    measures that re-conform quickly after a change, where the evidence
-    is a brief spike rather than a sustained climb."""
-    import jax
-    import jax.numpy as jnp
+    metrics = MetricsRegistry()
+    tracer = (Tracer(args.trace_out, annotate=args.annotate)
+              if args.trace_out else None)
+    return metrics, tracer
+
+
+def _validity_metrics(pvals, drifted, args, *, engine, metrics,
+                      use_max=False):
+    """Feed the recorded per-tenant p-value stream ((S, T), NaN on
+    warmup/inactive ticks) through the online validity monitors
+    (``repro.telemetry.validity``) and publish the results as metrics:
+    rolling empirical coverage vs 1-eps, the p-value-uniformity KS
+    distance, and the exchangeability drift martingales (per-tenant
+    ``drift_log_m`` gauges for the first 8 tenants, aggregate gauges for
+    all). ``use_max`` flags drift on the running max of log M (valid by
+    Ville's inequality) — the right read-out for measures that
+    re-conform quickly after a change. Returns the per-tenant flags."""
     import numpy as np
 
-    from repro.core.online import simple_mixture_log_martingale
+    from repro.telemetry.validity import (CoverageMonitor, DriftMonitor,
+                                          UniformityMonitor)
 
-    paths = np.asarray(jax.vmap(simple_mixture_log_martingale)(
-        jnp.asarray(pvals)))
-    stat = paths.max(axis=1) if use_max else paths[:, -1]
-    label = "max log M" if use_max else "log M_T"
-    S = len(stat)
+    p = np.asarray(pvals, float)
+    S, T = p.shape
+    cov = CoverageMonitor(args.eps, S, window=T)
+    uni = UniformityMonitor(S, window=T)
+    drift = DriftMonitor(S, threshold=args.log_threshold)
+    for t in range(T):
+        col = p[:, t]
+        cov.update(col)
+        uni.update(col)
+        drift.update(col)
+    cov.export(metrics, engine=engine)
+    uni.export(metrics, engine=engine)
+    drift.export(metrics, engine=engine, use_max=use_max)
+    stat = drift.max_log_m if use_max else drift.log_m()
     for s in range(min(S, 8)):
-        flag = "DRIFT" if stat[s] > threshold else "ok   "
-        print(f"  tenant {s:3d} [{flag}] {label}={stat[s]:8.2f} "
-              f"(drift injected: {bool(drifted[s])})")
-    det = stat > threshold
-    print(f"[serve] drift flagged: {int(det.sum())}/{S} "
-          f"(injected: {int(np.asarray(drifted).sum())})")
-    return det
+        metrics.gauge("drift_log_m", engine=engine,
+                      tenant=s, injected=bool(drifted[s])).set(
+            float(stat[s]))
+    metrics.gauge("drift_tenants_injected", engine=engine).set(
+        int(np.asarray(drifted).sum()))
+    return drift.flagged(use_max=use_max)
+
+
+def _emit_report(args, metrics, tracer, *, mode) -> None:
+    """THE report path — every serving mode renders through the metrics
+    text export (single formatting code path) and the same two output
+    files (``--metrics-out`` JSON dump, ``--trace-out`` JSONL trace)."""
+    print(f"[serve] telemetry ({mode}):")
+    for line in metrics.to_text().splitlines():
+        print("  " + line)
+    if args.metrics_out:
+        metrics.dump(args.metrics_out)
+        print(f"[serve] metrics -> {args.metrics_out}")
+    if tracer is not None:
+        tracer.close()
+        print(f"[serve] trace -> {tracer.path}")
 
 
 def _serve_sessions(args) -> int:
@@ -112,13 +157,15 @@ def _serve_sessions(args) -> int:
 
     from repro.serving import ServingEngine, SessionStore
 
+    metrics, tracer = _telemetry(args)
     S, T, dim = args.sessions, args.steps, args.dim
     if T < 2:
         raise SystemExit(
             "--steps must be >= 2 (tick 0 is the compile warmup)")
     eng = ServingEngine(
         n_sessions=S, capacity=args.capacity, dim=dim, k=args.k,
-        n_labels=2, window=args.window)
+        n_labels=2, window=args.window, instrument=True, metrics=metrics,
+        tracer=tracer)
     state = eng.init_state()
     print(f"[serve] engine: {S} sessions x cap {args.capacity} "
           f"(window={args.window}, k={args.k})")
@@ -133,14 +180,19 @@ def _serve_sessions(args) -> int:
         state, p = eng.observe(state, X[:, t], y[:, t], taus[:, t])
         pvals[:, t] = np.asarray(p)
     dt = time.time() - t0
-    print(f"[serve] {S} sessions x {T - 1} steps in {dt:.2f}s "
-          f"({S * (T - 1) / dt:.0f} session-steps/s)")
-    _drift_report(pvals[:, 1:], drifted, args.log_threshold)
+    metrics.gauge("serve_wall_s", mode="classification").set(dt)
+    metrics.gauge("serve_session_steps_per_s", mode="classification").set(
+        S * (T - 1) / dt)
+    eng.telemetry.drain()
+    _validity_metrics(pvals[:, 1:], drifted, args, engine="classification",
+                      metrics=metrics)
 
+    rc = 0
     if args.snapshot_dir:
-        store = SessionStore(args.snapshot_dir)
+        store = SessionStore(args.snapshot_dir, metrics=metrics,
+                             tracer=tracer)
         store.save(T, state, meta=eng.meta(), blocking=True)
-        eng2, state2, step = SessionStore(args.snapshot_dir).restore_engine()
+        eng2, state2, step = store.restore_engine()
         same = all(
             np.array_equal(np.asarray(a), np.asarray(b))
             for a, b in zip(jax.tree_util.tree_leaves(state),
@@ -148,8 +200,9 @@ def _serve_sessions(args) -> int:
         print(f"[serve] snapshot@step {step} -> restore "
               f"{'bit-exact' if same else 'MISMATCH'}")
         if not same:
-            return 1
-    return 0
+            rc = 1
+    _emit_report(args, metrics, tracer, mode="classification")
+    return rc
 
 
 def _serve_registry(args) -> int:
@@ -172,6 +225,7 @@ def _serve_registry(args) -> int:
     import numpy as np
 
     from repro.serving import registry
+    from repro.telemetry import EngineTelemetry
 
     spec = registry.get(args.measure)
     if spec.intervals is not None:
@@ -183,6 +237,9 @@ def _serve_registry(args) -> int:
     if T <= warm + 2:
         raise SystemExit(f"--steps must exceed the warmup ({warm + 2})")
 
+    metrics, tracer = _telemetry(args)
+    tele = EngineTelemetry(engine="registry", metrics=metrics,
+                           tracer=tracer)
     X, y, _, drifted = _class_drift_traffic(args, S, T, dim)
     X, y = np.asarray(X), np.asarray(y)
 
@@ -196,18 +253,26 @@ def _serve_registry(args) -> int:
             args.measure,
             **({**hp, "seed": args.seed + s} if "seed" in spec.defaults
                else hp))
-        cp.fit(X[s, :warm], y[s, :warm])
+        with tele.timed("fit", signature=args.measure, tenants=1):
+            cp.fit(X[s, :warm], y[s, :warm])
         for t in range(warm, T):
-            pvals[s, t] = np.asarray(cp.pvalues(X[s, t][None]))[0, y[s, t]]
-            cp.observe(X[s, t], int(y[s, t]))
+            with tele.timed("pvalues", signature=args.measure, tenants=1):
+                pvals[s, t] = np.asarray(
+                    cp.pvalues(X[s, t][None]))[0, y[s, t]]
+            with tele.timed("observe", signature=args.measure, tenants=1):
+                cp.observe(X[s, t], int(y[s, t]))
             if cp.n > w:
-                cp.evict(0)
+                with tele.timed("evict", signature=args.measure,
+                                tenants=1):
+                    cp.evict(0)
     dt = time.time() - t0
-    print(f"[serve] registry measure {args.measure!r}: {S} sessions x "
-          f"{T - warm} steps in {dt:.2f}s "
-          f"({S * (T - warm) / dt:.0f} session-steps/s, window={w})")
-    _drift_report(pvals[:, warm:], drifted, args.log_threshold,
-                  use_max=True)
+    metrics.gauge("serve_wall_s", mode="registry",
+                  measure=args.measure).set(dt)
+    metrics.gauge("serve_session_steps_per_s", mode="registry",
+                  measure=args.measure).set(S * (T - warm) / dt)
+    _validity_metrics(pvals[:, warm:], drifted, args, engine="registry",
+                      metrics=metrics, use_max=True)
+    _emit_report(args, metrics, tracer, mode=f"registry:{args.measure}")
     return 0
 
 
@@ -220,13 +285,15 @@ def _serve_regression(args) -> int:
     from repro.regression import RegressionServingEngine
     from repro.serving import SessionStore
 
+    metrics, tracer = _telemetry(args)
     S, T, dim = args.sessions, args.steps, args.dim
     if T < 2:
         raise SystemExit(
             "--steps must be >= 2 (tick 0 is the compile warmup)")
     eng = RegressionServingEngine(
         n_sessions=S, capacity=args.capacity, dim=dim, k=args.k,
-        window=args.window)
+        window=args.window, instrument=True, metrics=metrics,
+        tracer=tracer)
     state = eng.init_state()
     print(f"[serve] regression engine: {S} sessions x cap {args.capacity} "
           f"(window={args.window}, k={args.k})")
@@ -253,11 +320,14 @@ def _serve_regression(args) -> int:
         state, p = eng.observe(state, X[:, t], y[:, t], taus[:, t])
         pvals[:, t] = np.asarray(p)
     dt = time.time() - t0
-    print(f"[serve] {S} sessions x {T - 1} steps in {dt:.2f}s "
-          f"({S * (T - 1) / dt:.0f} session-steps/s)")
+    metrics.gauge("serve_wall_s", mode="regression").set(dt)
+    metrics.gauge("serve_session_steps_per_s", mode="regression").set(
+        S * (T - 1) / dt)
+    eng.telemetry.drain()
 
     warm = 2 * args.k  # k-NN warmup: earliest p-values are degenerate
-    _drift_report(pvals[:, warm:], drifted, args.log_threshold)
+    _validity_metrics(pvals[:, warm:], drifted, args, engine="regression",
+                      metrics=metrics)
 
     # exact prediction intervals for a fresh query batch, every tenant
     # in one dispatch
@@ -265,14 +335,17 @@ def _serve_regression(args) -> int:
                            (4, dim), jnp.float32)
     iv = np.asarray(eng.intervals(state, Xq, epsilon=args.eps))
     widths = iv[:, :, 1] - iv[:, :, 0]
-    print(f"[serve] intervals (eps={args.eps}): finite "
-          f"{np.isfinite(iv).mean():.2f}, median width "
-          f"{np.nanmedian(widths):.2f}")
+    metrics.gauge("intervals_finite_frac", engine="regression").set(
+        float(np.isfinite(iv).mean()))
+    metrics.gauge("intervals_median_width", engine="regression").set(
+        float(np.nanmedian(widths)))
 
+    rc = 0
     if args.snapshot_dir:
-        store = SessionStore(args.snapshot_dir)
+        store = SessionStore(args.snapshot_dir, metrics=metrics,
+                             tracer=tracer)
         store.save(T, state, meta=eng.meta(), blocking=True)
-        eng2, state2, step = SessionStore(args.snapshot_dir).restore_engine()
+        eng2, state2, step = store.restore_engine()
         same = all(
             np.array_equal(np.asarray(a), np.asarray(b))
             for a, b in zip(jax.tree_util.tree_leaves(state),
@@ -280,8 +353,9 @@ def _serve_regression(args) -> int:
         print(f"[serve] snapshot@step {step} -> restore "
               f"{'bit-exact' if same else 'MISMATCH'}")
         if not same:
-            return 1
-    return 0
+            rc = 1
+    _emit_report(args, metrics, tracer, mode="regression")
+    return rc
 
 
 def main(argv=None) -> int:
@@ -316,6 +390,16 @@ def main(argv=None) -> int:
                     help="bootstrap ensemble size B (--measure bootstrap)")
     ap.add_argument("--tree-depth", type=int, default=3,
                     help="bootstrap tree depth (--measure bootstrap)")
+    # telemetry (repro.telemetry) — serving modes only
+    ap.add_argument("--metrics-out", default="",
+                    help="write the end-of-run metrics snapshot to this "
+                         "JSON file (the same snapshot the report prints)")
+    ap.add_argument("--trace-out", default="",
+                    help="record one JSONL trace record per engine op to "
+                         "this file (schema: repro.telemetry.tracer)")
+    ap.add_argument("--annotate", action="store_true",
+                    help="with --trace-out: wrap traced ops in "
+                         "jax.profiler.TraceAnnotation scopes")
     args = ap.parse_args(argv)
 
     if args.sessions > 0:

@@ -68,11 +68,19 @@ class RegressionServingEngine:
                 "compact" — the historic positional layout (O(cap^2)
                 eviction traffic); kept as the benchmark baseline and
                 the exactness oracle, bit-identical to "ring".
+    instrument: attach telemetry (``repro.telemetry``): per-op latency
+                histograms + trace records, and in-graph per-tick device
+                counters (evictions / ring wraps / occupancy) folded
+                into a lazy accumulator — drain with
+                ``engine.telemetry.drain()``. Bit-identical to the
+                uninstrumented engine (tested); ``metrics`` / ``tracer``
+                as in ``serving.engine.ServingEngine``.
     """
 
     def __init__(self, *, n_sessions: int, capacity: int, dim: int, k: int,
                  window: int | None = None, dtype=jnp.float32,
-                 donate: bool = True, layout: str = "ring"):
+                 donate: bool = True, layout: str = "ring",
+                 instrument: bool = False, metrics=None, tracer=None):
         if window is not None and window > capacity:
             raise ValueError(f"window {window} exceeds capacity {capacity}")
         if window is not None and window < 1:
@@ -104,9 +112,17 @@ class RegressionServingEngine:
                                  evictable=window is not None, wmax=wmax)
         self._wmax = wmax
         self._w_checked = False
+        self.telemetry = None
+        if instrument:
+            from repro.telemetry import EngineTelemetry
+            self.telemetry = EngineTelemetry(
+                engine="regression", metrics=metrics, tracer=tracer,
+                n_of=lambda s: s.n, head_of=lambda s: s.head,
+                wrap_of=lambda s: s.wrap)
         vstep = jax.vmap(step, in_axes=(0, 0, 0, 0, 0, 0))
         self._step_many = jax.jit(
-            engine_utils.scan_chunk(vstep),
+            engine_utils.scan_chunk(
+                vstep, self.telemetry.stats_fn if instrument else None),
             donate_argnums=(0,) if donate else ())
         # lax.map, not vmap: the scanned body keeps the exact per-session
         # graph, so served reads stay bit-identical to the single-session
@@ -158,8 +174,8 @@ class RegressionServingEngine:
         """
         if active is None:
             active = jnp.ones((self.n_sessions,), dtype=bool)
-        state, p = self.observe_many(
-            state, x[None], y[None], tau[None], active[None])
+        state, p = self._dispatch(
+            state, x[None], y[None], tau[None], active[None], op="observe")
         return state, p[0]
 
     def observe_many(self, state: RegStreamState, xs, ys, taus,
@@ -177,13 +193,27 @@ class RegressionServingEngine:
         """
         if active is None:
             active = jnp.ones(xs.shape[:2], dtype=bool)
+        return self._dispatch(state, xs, ys, taus, active,
+                              op="observe_many")
+
+    def _dispatch(self, state: RegStreamState, xs, ys, taus, active, *,
+                  op: str):
+        """The shared observe/observe_many dispatch (telemetry-aware)."""
         state = engine_utils.ensure_room(self, state, xs.shape[0],
                                          lambda s: s.n)
         engine_utils.check_window_occupancy(self, state, lambda s: s.n,
                                             lambda s: s.wrap)
-        return self._step_many(state, xs, ys.astype(self.dtype),
-                               taus.astype(self.dtype),
-                               self._windows(state), active)
+        args = (state, xs, ys.astype(self.dtype), taus.astype(self.dtype),
+                self._windows(state), active)
+        if self.telemetry is None:
+            return self._step_many(*args)
+        T, S = xs.shape[:2]
+        with self.telemetry.timed(op, signature=(xs.shape, self.capacity),
+                                  ticks=T, tenants=S,
+                                  capacity=self.capacity):
+            state, (p, stats) = self._step_many(*args)
+        self.telemetry.ticks.fold(stats)
+        return state, p
 
     def reset_occupancy(self) -> None:
         """Forget the host-side occupancy bound (grow mode) and the
@@ -199,7 +229,14 @@ class RegressionServingEngine:
         full-capacity modulus; a sliding engine pins the modulus back to
         its window block (the normalized state fits it: head == 0,
         n <= window)."""
-        out = jax.vmap(functools.partial(sess_m.grow, factor=factor))(state)
+        grow_all = jax.vmap(functools.partial(sess_m.grow, factor=factor))
+        if self.telemetry is not None:
+            with self.telemetry.timed("grow", tenants=self.n_sessions,
+                                      capacity=self.capacity * factor,
+                                      signature=self.capacity):
+                out = grow_all(state)
+        else:
+            out = grow_all(state)
         self.capacity = out.capacity
         if self._wmax is not None:
             out = RegStreamState(out.X, out.y, out.D, out.nbr_d, out.nbr_y,
@@ -221,8 +258,14 @@ class RegressionServingEngine:
         if X_test.ndim == 2:
             X_test = jnp.broadcast_to(
                 X_test, (self.n_sessions,) + X_test.shape)
-        return self._intervals(state, X_test,
-                               jnp.asarray(epsilon, self.dtype))
+        eps = jnp.asarray(epsilon, self.dtype)
+        if self.telemetry is None:
+            return self._intervals(state, X_test, eps)
+        with self.telemetry.timed("intervals",
+                                  signature=(X_test.shape, self.capacity),
+                                  tenants=self.n_sessions,
+                                  capacity=self.capacity):
+            return self._intervals(state, X_test, eps)
 
     def pvalues(self, state: RegStreamState, X_test,
                 t_query) -> jnp.ndarray:
@@ -230,7 +273,13 @@ class RegressionServingEngine:
         if X_test.ndim == 2:
             X_test = jnp.broadcast_to(
                 X_test, (self.n_sessions,) + X_test.shape)
-        return self._pvalues(state, X_test, t_query)
+        if self.telemetry is None:
+            return self._pvalues(state, X_test, t_query)
+        with self.telemetry.timed("pvalues",
+                                  signature=(X_test.shape, self.capacity),
+                                  tenants=self.n_sessions,
+                                  capacity=self.capacity):
+            return self._pvalues(state, X_test, t_query)
 
     # -- snapshot -----------------------------------------------------------
 

@@ -1,0 +1,43 @@
+"""Low-overhead observability for the CP serving stack.
+
+Four pieces, composable and individually optional:
+
+* ``metrics``  — process-wide registry of counters / gauges /
+  fixed-bucket latency histograms (p50/p99) with plain-text and JSON
+  export. No external deps, no background threads.
+* ``tracer``   — JSONL per-op trace recorder (one record per engine
+  dispatch: op kind, tenant count, capacity bucket, wall time,
+  compile-vs-steady flag). The recorded file doubles as the input
+  format for the trace-replay benchmark harness (ROADMAP item).
+* ``device``   — in-graph per-tick counters (evictions, ring wraps,
+  occupancy) carried alongside engine state and drained to host
+  metrics without breaking buffer donation or bit-exactness.
+* ``validity`` — online CP correctness monitors: rolling empirical
+  coverage vs 1-eps, a vectorized p-value-uniformity (ECDF/KS)
+  statistic, and the exchangeability drift martingales, all surfaced
+  as metrics instead of one-shot prints.
+
+The engines accept ``instrument=True`` (plus optional ``metrics=`` /
+``tracer=``) and stay bit-identical to the uninstrumented path — the
+device stats only *read* the cheap integer bookkeeping leaves
+(``n``/``head``/``wrap``), never the float state (property-tested).
+"""
+from repro.telemetry.metrics import (Counter, Gauge, Histogram,
+                                     MetricsRegistry, get_registry,
+                                     set_registry)
+from repro.telemetry.tracer import (OP_KINDS, TRACE_SCHEMA, Tracer,
+                                    capacity_bucket, read_trace,
+                                    validate_record, validate_trace_file)
+from repro.telemetry.device import TickStats, make_chunk_stats_fn
+from repro.telemetry.hooks import EngineTelemetry
+from repro.telemetry.validity import (CoverageMonitor, DriftMonitor,
+                                      UniformityMonitor)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "get_registry",
+    "set_registry",
+    "OP_KINDS", "TRACE_SCHEMA", "Tracer", "capacity_bucket", "read_trace",
+    "validate_record", "validate_trace_file",
+    "TickStats", "make_chunk_stats_fn", "EngineTelemetry",
+    "CoverageMonitor", "DriftMonitor", "UniformityMonitor",
+]

@@ -1,0 +1,95 @@
+"""Per-engine instrumentation bundle used by the serving engines.
+
+``EngineTelemetry`` owns everything an instrumented engine needs:
+
+* op timing — each engine-level dispatch (observe / observe_many /
+  predict / intervals / pvalues / grow) lands in a latency histogram
+  (steady-state calls separate from the compile-including first call
+  at each shape signature) and, when a ``Tracer`` is attached, as one
+  JSONL trace record with the compile-vs-steady flag.
+* device tick stats — the in-graph per-tick counters from
+  ``telemetry.device`` folded into a lazy device accumulator
+  (``.ticks``); ``drain()`` publishes them.
+
+The timing wrapper never forces a device sync: ``wall_s`` is host wall
+time around the (async) dispatch. Loops that synchronize per call
+(fetching p-values each tick) therefore get device-true histograms; a
+fire-and-forget caller measures enqueue time, which the trace schema
+documents. This is what keeps the instrumented hot path inside the
+<= 5 % overhead budget that CI enforces.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Any, Callable
+
+from repro.telemetry.device import TickStats, make_chunk_stats_fn
+from repro.telemetry.metrics import MetricsRegistry, get_registry
+from repro.telemetry.tracer import Tracer
+
+
+class EngineTelemetry:
+    """Instrumentation state attached to one serving engine."""
+
+    def __init__(self, *, engine: str, n_of: Callable | None = None,
+                 head_of: Callable | None = None,
+                 wrap_of: Callable | None = None,
+                 metrics: MetricsRegistry | None = None,
+                 tracer: Tracer | None = None):
+        self.engine = engine
+        self.metrics = metrics if metrics is not None else get_registry()
+        self.tracer = tracer
+        # device tick stats need the state accessors; host-only callers
+        # (e.g. the registry serving loop) skip them and get timing only
+        if n_of is not None:
+            self.stats_fn = make_chunk_stats_fn(n_of, head_of, wrap_of)
+            self.ticks = TickStats(self.metrics, engine=engine)
+        else:
+            self.stats_fn = None
+            self.ticks = None
+        self._seen: set = set()
+
+    def first_call(self, op: str, signature: Any) -> bool:
+        key = (op, signature)
+        if key in self._seen:
+            return False
+        self._seen.add(key)
+        return True
+
+    def record_op(self, op: str, wall_s: float, *, compile_flag: bool,
+                  ticks: int | None = None, tenants: int | None = None,
+                  capacity: int | None = None) -> None:
+        m = self.metrics
+        m.counter("engine_ops_total", op=op, engine=self.engine).inc()
+        suffix = "compile_s" if compile_flag else "wall_s"
+        m.histogram(f"engine_{op}_{suffix}", engine=self.engine).observe(
+            wall_s)
+        if self.tracer is not None:
+            self.tracer.record(op, wall_s, compile=compile_flag,
+                               ticks=ticks, tenants=tenants,
+                               capacity=capacity, engine=self.engine)
+
+    @contextlib.contextmanager
+    def timed(self, op: str, *, signature: Any = None,
+              ticks: int | None = None, tenants: int | None = None,
+              capacity: int | None = None):
+        """Time one engine dispatch (no forced sync; see module doc)."""
+        compile_flag = self.first_call(op, signature)
+        ann = contextlib.nullcontext()
+        if self.tracer is not None and self.tracer.annotate:
+            from jax.profiler import TraceAnnotation
+            ann = TraceAnnotation(f"repro.{op}")
+        with ann:
+            t0 = time.perf_counter()
+            yield
+            wall = time.perf_counter() - t0
+        self.record_op(op, wall, compile_flag=compile_flag, ticks=ticks,
+                       tenants=tenants, capacity=capacity)
+
+    def drain(self) -> dict[str, int]:
+        """Publish accumulated device tick stats (one host sync)."""
+        return self.ticks.drain() if self.ticks is not None else {}
+
+
+__all__ = ["EngineTelemetry"]

@@ -1,0 +1,247 @@
+"""JSONL per-op trace recorder for the serving hot path.
+
+One JSON object per line, one line per engine-level operation. The file
+is the recording half of the ROADMAP's trace-driven benchmark: a replay
+harness can re-drive the engines from the ``op``/``ticks``/``tenants``
+sequence, and the timing fields calibrate per-bucket cost models.
+
+Schema (``TRACE_SCHEMA``) — every record carries the required fields;
+optional fields appear when the recorder knows them:
+
+required
+    schema      int   trace format version (== SCHEMA_VERSION)
+    seq         int   per-tracer monotone record index
+    t           float seconds since tracer start (host clock)
+    op          str   one of OP_KINDS
+    wall_s      float host wall time around the dispatch. JAX dispatch
+                      is async: unless the caller synchronized, this is
+                      enqueue + host-side time, not device time (the
+                      per-op histogram of synchronized loops — e.g. the
+                      launcher's per-tick loop, which fetches p-values
+                      every tick — is device-true).
+optional
+    compile     bool  first call at this (op, shape signature): wall_s
+                      includes XLA compile ("compile-vs-steady" flag)
+    tenants     int   session slots in the dispatch
+    ticks       int   ticks advanced (observe_many chunk length)
+    capacity    int   per-session padded capacity
+    cap_bucket  int   next_pow2(capacity) — the retrace bucket
+    engine      str   "classification" | "regression" | "registry"
+    dispatch_s  float device-synchronized time, when the caller timed a
+                      ``block_until_ready`` explicitly
+    extra: any remaining keys are recorder-specific (e.g. drained device
+    counters on a flush record) and must be JSON-serializable.
+
+``Tracer(path, annotate=True)`` additionally wraps each recorded op in a
+``jax.profiler.TraceAnnotation`` so records line up with device traces
+captured via ``jax.profiler.trace()``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, IO
+
+SCHEMA_VERSION = 1
+
+OP_KINDS = (
+    "observe", "observe_many", "predict", "intervals", "pvalues",
+    "evict", "grow", "snapshot_save", "snapshot_restore", "fit",
+)
+
+_REQUIRED = {"schema": int, "seq": int, "t": float, "op": str,
+             "wall_s": float}
+_OPTIONAL = {"compile": bool, "tenants": int, "ticks": int,
+             "capacity": int, "cap_bucket": int, "engine": str,
+             "dispatch_s": float}
+
+TRACE_SCHEMA = {"version": SCHEMA_VERSION, "required": _REQUIRED,
+                "optional": _OPTIONAL, "op_kinds": OP_KINDS}
+
+
+def capacity_bucket(capacity: int) -> int:
+    """The engine retrace bucket: smallest power of two >= capacity."""
+    return 1 << max(int(capacity) - 1, 0).bit_length()
+
+
+def validate_record(rec: dict[str, Any]) -> None:
+    """Raise ValueError if ``rec`` does not satisfy TRACE_SCHEMA."""
+    for k, ty in _REQUIRED.items():
+        if k not in rec:
+            raise ValueError(f"trace record missing required field {k!r}: "
+                             f"{rec}")
+        v = rec[k]
+        ok = isinstance(v, ty) or (ty is float and isinstance(v, int)
+                                   and not isinstance(v, bool))
+        if not ok or (ty is int and isinstance(v, bool)):
+            raise ValueError(
+                f"trace field {k!r} has type {type(v).__name__}, "
+                f"expected {ty.__name__}: {rec}")
+    if rec["schema"] != SCHEMA_VERSION:
+        raise ValueError(f"trace schema {rec['schema']} != "
+                         f"{SCHEMA_VERSION}")
+    if rec["op"] not in OP_KINDS:
+        raise ValueError(f"unknown trace op {rec['op']!r} "
+                         f"(known: {OP_KINDS})")
+    for k, ty in _OPTIONAL.items():
+        if k in rec:
+            v = rec[k]
+            ok = isinstance(v, ty) or (ty is float and isinstance(v, int)
+                                       and not isinstance(v, bool))
+            if not ok or (ty is int and isinstance(v, bool)):
+                raise ValueError(
+                    f"trace field {k!r} has type {type(v).__name__}, "
+                    f"expected {ty.__name__}: {rec}")
+
+
+def read_trace(path: str) -> list[dict[str, Any]]:
+    """Load a JSONL trace file (no validation; see validate_trace_file)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def validate_trace_file(path: str) -> list[dict[str, Any]]:
+    """Read + schema-validate every record; returns the records."""
+    recs = read_trace(path)
+    seq = -1
+    for rec in recs:
+        validate_record(rec)
+        if rec["seq"] <= seq:
+            raise ValueError(f"trace seq not monotone at {rec['seq']}")
+        seq = rec["seq"]
+    return recs
+
+
+class Tracer:
+    """Append-only JSONL trace writer.
+
+    Records are flushed per line (the file is valid mid-run; a crash
+    loses at most the current line). ``annotate=True`` wraps ``op()``
+    bodies in ``jax.profiler.TraceAnnotation(op)`` so host records can
+    be joined against an XLA profiler trace of the same run.
+    """
+
+    def __init__(self, path_or_file: str | IO[str], *,
+                 annotate: bool = False):
+        if isinstance(path_or_file, str):
+            d = os.path.dirname(path_or_file)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            self._f: IO[str] = open(path_or_file, "w")
+            self._owns = True
+            self.path: str | None = path_or_file
+        else:
+            self._f = path_or_file
+            self._owns = False
+            self.path = getattr(path_or_file, "name", None)
+        self.annotate = annotate
+        self._t0 = time.perf_counter()
+        self._seq = 0
+        self._seen: set = set()
+        self._closed = False
+
+    # -- compile-vs-steady ---------------------------------------------------
+
+    def first_call(self, op: str, signature: Any = None) -> bool:
+        """True exactly once per (op, signature): the compile call."""
+        key = (op, signature)
+        if key in self._seen:
+            return False
+        self._seen.add(key)
+        return True
+
+    # -- recording -----------------------------------------------------------
+
+    def record(self, op: str, wall_s: float, **fields) -> dict[str, Any]:
+        if self._closed:
+            return {}
+        rec: dict[str, Any] = {
+            "schema": SCHEMA_VERSION,
+            "seq": self._seq,
+            "t": time.perf_counter() - self._t0,
+            "op": op,
+            "wall_s": float(wall_s),
+        }
+        for k, v in fields.items():
+            if v is None:
+                continue
+            if k == "capacity":
+                rec["capacity"] = int(v)
+                rec["cap_bucket"] = capacity_bucket(int(v))
+                continue
+            if k in ("tenants", "ticks", "cap_bucket"):
+                v = int(v)
+            elif k in ("dispatch_s",):
+                v = float(v)
+            elif k == "compile":
+                v = bool(v)
+            rec[k] = v
+        validate_record(rec)
+        self._seq += 1
+        self._f.write(json.dumps(rec) + "\n")
+        self._f.flush()
+        return rec
+
+    def op(self, op: str, *, signature: Any = None, **fields):
+        """Context manager: times the body and records one line.
+
+        ``signature`` feeds the compile-vs-steady flag (first call at a
+        given (op, signature) is the compiling one). Extra ``fields``
+        land in the record. The open record dict is yielded so the body
+        can attach late fields (e.g. ``dispatch_s``).
+        """
+        return _OpContext(self, op, signature, fields)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if self._owns:
+            self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+class _OpContext:
+    def __init__(self, tracer: Tracer, op: str, signature, fields):
+        self._tracer = tracer
+        self._op = op
+        self._sig = signature
+        self._fields = dict(fields)
+        self._ann = None
+        self.late: dict[str, Any] = {}
+
+    def __enter__(self):
+        self._fields.setdefault(
+            "compile", self._tracer.first_call(self._op, self._sig))
+        if self._tracer.annotate:
+            from jax.profiler import TraceAnnotation
+            self._ann = TraceAnnotation(f"repro.{self._op}")
+            self._ann.__enter__()
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        wall = time.perf_counter() - self._t0
+        if self._ann is not None:
+            self._ann.__exit__(*exc)
+        if exc[0] is None:
+            self._tracer.record(self._op, wall,
+                                **{**self._fields, **self.late})
+        return False
+
+
+__all__ = ["SCHEMA_VERSION", "OP_KINDS", "TRACE_SCHEMA", "Tracer",
+           "capacity_bucket", "validate_record", "read_trace",
+           "validate_trace_file"]
