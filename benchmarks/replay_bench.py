@@ -1,0 +1,160 @@
+"""Replay-under-load benchmark: p50/p99 latency curves per workload,
+and the cost-model auto-tune versus the hand-tuned chunk.
+
+Two row families, MERGED into BENCH_serve.json (every other row is
+preserved — ``serve_bench.py`` owns the throughput rows, this module
+owns the ``bench_kind: replay*`` rows):
+
+* ``replay`` — one row per loadgen workload (steady / bursty / diurnal
+  / zipf) replayed against the classification engine under real
+  (speedup-compressed) arrival timing: device-true p50/p99 service
+  latency per op, sojourn p99 (queueing included), steps/s, queue
+  depth, SLO-violation fraction. The bursty row's sojourn-vs-service
+  gap is the queueing story the tracer alone can't tell.
+* ``replay_autotune`` — the same steady trace replayed twice at
+  ``speedup=inf``: once with the hand-tuned observe_many chunk (the
+  benches' historic 64) and once with ``CostModel.suggest_chunk()``
+  fitted from a fresh engine calibration. ``autotune_ratio`` is
+  auto/hand steps-per-s (CI floors it at 0.5; parity or better is the
+  acceptance bar).
+
+    PYTHONPATH=src python benchmarks/replay_bench.py [--quick] \\
+        [--out BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+
+
+def run_workloads(workloads=None, *, ops=256, tenants=8, capacity=128,
+                  dim=8, k=7, rate=300.0, speedup=1.0, slo_ms=25.0,
+                  seed=0):
+    """One replay row per workload, under arrival timing.
+
+    ``rate=300`` ops/s vs a ~1-2 ms CPU service time keeps the steady
+    workload below saturation, so the bursty on/off factor (8x) is what
+    pushes the queue — the regime where sojourn p99 separates from
+    service p99.
+    """
+    from repro.telemetry import loadgen, replay
+
+    rows = []
+    for w in (workloads or loadgen.WORKLOADS):
+        recs = loadgen.generate(
+            w, ops=ops, tenants=tenants, capacity=capacity, rate=rate,
+            seed=seed, slo_s=slo_ms / 1e3)
+        rep = replay(recs, engine="classification", dim=dim, k=k,
+                     speedup=speedup, seed=seed).report
+        row = {
+            "bench_kind": "replay",
+            "workload": w,
+            "engine": "classification",
+            "ops": ops,
+            "tenants": rep["tenants"],
+            "capacity": rep["capacity"],
+            "rate": rate,
+            "speedup": speedup,
+            "slo_ms": slo_ms,
+            "wall_s": rep["wall_s"],
+            "steps_per_s": rep["steps_per_s"],
+            "slo_violation_frac": rep["slo_violation_frac"],
+            "queue_depth_max": rep["queue_depth_max"],
+        }
+        for op, d in rep["per_op"].items():
+            row[f"{op}_p50_s"] = d["p50_s"]
+            row[f"{op}_p99_s"] = d["p99_s"]
+            row[f"{op}_sojourn_p99_s"] = d["sojourn_p99_s"]
+        rows.append(row)
+        print(f"[replay_bench] {w:8s} service p99 "
+              f"{row['observe_p99_s'] * 1e3:7.2f}ms  sojourn p99 "
+              f"{row['observe_sojourn_p99_s'] * 1e3:7.2f}ms  "
+              f"slo_viol {row['slo_violation_frac']:.3f}  "
+              f"q_max {row['queue_depth_max']:.0f}")
+    return rows
+
+
+def run_autotune(*, ops=384, tenants=8, capacity=128, dim=8, k=7,
+                 hand_chunk=64, seed=0):
+    """Suggested-vs-hand-tuned chunk on a steady observe-only trace."""
+    from repro.telemetry import (CostModel, calibrate_engine, loadgen,
+                                 replay)
+    from repro.telemetry.tracer import capacity_bucket
+
+    model = CostModel.fit(
+        calibrate_engine("classification", tenants=tenants,
+                         capacity=capacity, dim=dim, k=k, seed=seed),
+        source="calibrate")
+    bucket = capacity_bucket(capacity)
+    suggested = model.suggest_chunk(cap_bucket=bucket,
+                                    engine="classification")
+    entry = model.entries[("classification", "observe_many", bucket)]
+
+    # observe-only (predict_every=0): both replays coalesce maximally,
+    # so the chunk size is the only variable
+    recs = loadgen.generate("steady", ops=ops, tenants=tenants,
+                            capacity=capacity, seed=seed, predict_every=0)
+    rep_hand = replay(recs, engine="classification", dim=dim, k=k,
+                      speedup=math.inf, seed=seed,
+                      chunk=hand_chunk).report
+    rep_auto = replay(recs, engine="classification", dim=dim, k=k,
+                      speedup=math.inf, seed=seed, chunk=suggested).report
+    row = {
+        "bench_kind": "replay_autotune",
+        "engine": "classification",
+        "ops": ops,
+        "tenants": tenants,
+        "capacity": capacity,
+        "chunk_hand": hand_chunk,
+        "chunk_suggested": suggested,
+        "model_dispatch_s": entry["a"],
+        "model_per_tick_s": entry["b"],
+        "steps_per_s_hand": rep_hand["steps_per_s"],
+        "steps_per_s_auto": rep_auto["steps_per_s"],
+        "autotune_ratio": rep_auto["steps_per_s"]
+        / rep_hand["steps_per_s"],
+    }
+    print(f"[replay_bench] autotune chunk {suggested} vs hand "
+          f"{hand_chunk}: {row['steps_per_s_auto']:.0f}/s vs "
+          f"{row['steps_per_s_hand']:.0f}/s "
+          f"({row['autotune_ratio']:.2f}x)")
+    return [row]
+
+
+def merge_rows(out: str, rows: list[dict]) -> dict:
+    """Replace the ``replay*`` rows of ``out`` in place, keep the rest."""
+    if os.path.exists(out):
+        with open(out) as f:
+            payload = json.load(f)
+    else:
+        import jax
+        payload = {"bench": "serving_engine",
+                   "backend": jax.default_backend(),
+                   "device": str(jax.devices()[0]), "results": []}
+    payload["results"] = [
+        r for r in payload["results"]
+        if not str(r.get("bench_kind", "")).startswith("replay")
+    ] + rows
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller traces (CI smoke)")
+    args = ap.parse_args(argv)
+    ops = 96 if args.quick else 256
+    rows = run_workloads(ops=ops)
+    rows += run_autotune(ops=192 if args.quick else 384)
+    merge_rows(args.out, rows)
+    print(f"[replay_bench] merged {len(rows)} replay rows -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -24,8 +24,8 @@ def main(argv=None) -> int:
 
     from benchmarks import (bootstrap_bench, fig2_predict_time,
                             fig3_train_time, fig4_regression, online_bench,
-                            regression_bench, roofline, serve_bench,
-                            table2_highdim, table3_parallel)
+                            regression_bench, replay_bench, roofline,
+                            serve_bench, table2_highdim, table3_parallel)
 
     def _sliding_rows(fn, tag, caps):
         return [
@@ -78,6 +78,27 @@ def main(argv=None) -> int:
                 f"overhead={100 * r['instrumentation_overhead_frac']:+.1f}"
                 f"% plain={r['observe_many_s_plain'] * 1e3:.2f}ms")
             for r in serve_bench.run_overhead()],
+        # trace replay under load (loadgen workloads) + the cost-model
+        # chunk auto-tune vs the hand-tuned constant
+        "replay": lambda: [
+            row(f"replay/{r['workload']}",
+                f"S={r['tenants']},cap={r['capacity']},x{r['speedup']:g}",
+                r["observe_p99_s"],
+                f"p50={r['observe_p50_s'] * 1e3:.2f}ms "
+                f"sojourn_p99={r['observe_sojourn_p99_s'] * 1e3:.2f}ms "
+                f"slo_viol={r['slo_violation_frac']:.2f} "
+                f"q_max={r['queue_depth_max']:.0f}")
+            for r in replay_bench.run_workloads(
+                ops=96 if args.quick else 256)
+        ] + [
+            row("replay/autotune",
+                f"chunk={r['chunk_suggested']}vs{r['chunk_hand']}",
+                r["tenants"] / r["steps_per_s_auto"],
+                f"auto={r['steps_per_s_auto']:.0f}/s "
+                f"hand={r['steps_per_s_hand']:.0f}/s "
+                f"ratio={r['autotune_ratio']:.2f}x")
+            for r in replay_bench.run_autotune(
+                ops=192 if args.quick else 384)],
         "roofline": lambda: roofline.run(mesh_filter=None),
     }
     only = set(args.only.split(",")) if args.only else set(suites)

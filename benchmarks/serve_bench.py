@@ -268,6 +268,14 @@ def main(argv=None) -> int:
     results += run_sliding((256, 1024) if args.quick
                            else (256, 1024, 4096))
     results += run_overhead(chunk=args.chunk)
+    # the replay rows (bench_kind replay*) belong to replay_bench.py —
+    # carry them over instead of dropping them on rewrite
+    import os
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            old = json.load(f).get("results", [])
+        results += [r for r in old
+                    if str(r.get("bench_kind", "")).startswith("replay")]
     payload = {
         "bench": "serving_engine",
         "backend": jax.default_backend(),

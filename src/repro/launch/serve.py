@@ -49,6 +49,21 @@ text export. ``--metrics-out`` dumps the same snapshot as JSON and
     python -m repro.launch.serve --sessions 8 --steps 64 \\
         --metrics-out metrics.json --trace-out trace.jsonl
 
+``--replay TRACE`` turns the launcher into a load-test driver
+(``repro.telemetry.replay``): TRACE is either a recorded JSONL trace
+file or a ``loadgen:<workload>`` spec (steady / bursty / diurnal /
+zipf) synthesized on the fly. The trace's ops are dispatched against a
+fresh engine (classification, or regression with ``--regression``),
+preserving inter-arrival timing compressed by ``--speedup`` (default
+``inf`` = as-fast-as-possible), and the report adds p50/p99 per-op
+latency, steps/s, queue depth and the ``--slo-ms`` violation fraction.
+``--auto-tune`` fits the per-(op, capacity-bucket) cost model
+(``repro.telemetry.costmodel``) and replaces the hand-tuned
+observe_many chunk with ``suggest_chunk()``::
+
+    python -m repro.launch.serve --replay loadgen:bursty --steps 256 \\
+        --sessions 8 --speedup inf --slo-ms 50 --auto-tune
+
 Pipeline per batch of requests:
     1. prefill the prompt, build per-layer KV/recurrent caches,
     2. greedy decode ``gen_tokens`` steps with the serve_step,
@@ -358,6 +373,82 @@ def _serve_regression(args) -> int:
     return rc
 
 
+def _serve_replay(args) -> int:
+    """Trace replay / load-test mode (``--replay``): drive one engine
+    from a recorded trace or a ``loadgen:<workload>`` spec, report
+    p50/p99-under-load, and (``--auto-tune``) swap the hand-tuned
+    observe_many chunk for the cost model's ``suggest_chunk``."""
+    from repro.telemetry import (CostModel, calibrate_engine, iter_trace,
+                                 loadgen, replay)
+    from repro.telemetry.tracer import capacity_bucket
+
+    kind = "regression" if args.regression else "classification"
+    slo_s = args.slo_ms / 1000.0 if args.slo_ms > 0 else None
+    speedup = float(args.speedup)  # accepts "inf"
+
+    if args.replay.startswith("loadgen:"):
+        workload = args.replay.split(":", 1)[1]
+        records = loadgen.generate(
+            workload, ops=args.steps, tenants=args.sessions or 8,
+            capacity=args.capacity, engine=kind, rate=args.rate,
+            seed=args.seed, slo_s=slo_s)
+        src = args.replay
+    else:
+        records = list(iter_trace(args.replay))
+        src = args.replay
+    tenants = max(int(r.get("tenants", 1)) for r in records)
+    cap = max((int(r.get("capacity", 0)) for r in records),
+              default=0) or args.capacity
+
+    # cost model: load one > fit from the trace's steady timing > probe
+    # the engine (loadgen traces record arrivals, not costs)
+    model = None
+    chunk = None
+    if args.cost_model:
+        model = CostModel.load(args.cost_model)
+        print(f"[serve] cost model <- {args.cost_model}")
+    elif args.auto_tune or args.cost_model_out:
+        model = CostModel.fit(records, source=src)
+        if not model.entries:
+            print("[serve] trace carries no steady timing; "
+                  "calibrating the engine")
+            model = CostModel.fit(
+                calibrate_engine(kind, tenants=tenants, capacity=cap,
+                                 dim=args.dim, k=args.k, seed=args.seed),
+                source="calibrate")
+    if args.auto_tune and model is not None and model.entries:
+        chunk = model.suggest_chunk(cap_bucket=capacity_bucket(cap),
+                                    engine=kind)
+        print(f"[serve] auto-tune: observe_many chunk <- {chunk}")
+    if args.cost_model_out and model is not None:
+        model.save(args.cost_model_out)
+        print(f"[serve] cost model -> {args.cost_model_out}")
+
+    metrics, tracer = _telemetry(args)
+    res = replay(records, engine=kind, dim=args.dim, k=args.k,
+                 window=min(args.window, cap),  # trace may be smaller
+                 speedup=speedup, seed=args.seed,
+                 slo_s=slo_s, chunk=chunk, eps=args.eps, metrics=metrics,
+                 tracer=tracer)
+    rep = res.report
+    print(f"[serve] replay {src} -> {kind} engine "
+          f"({rep['tenants']} tenants x cap {rep['capacity']}): "
+          f"{rep['ops_replayed']} ops ({rep['ops_skipped']} skipped), "
+          f"{rep['ticks']} ticks in {rep['wall_s']:.3f}s "
+          f"({rep['steps_per_s']:.0f} session steps/s)")
+    for op, d in rep["per_op"].items():
+        print(f"  {op:12s} p50={d['p50_s'] * 1e3:8.3f}ms "
+              f"p99={d['p99_s'] * 1e3:8.3f}ms "
+              f"sojourn_p99={d['sojourn_p99_s'] * 1e3:8.3f}ms "
+              f"n={d['count']:.0f}")
+    if slo_s is not None:
+        print(f"  SLO {args.slo_ms:g}ms: violation fraction "
+              f"{rep['slo_violation_frac']:.4f}")
+    print(f"  queue depth max {rep['queue_depth_max']:.0f}")
+    _emit_report(args, metrics, tracer, mode=f"replay:{kind}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
@@ -390,6 +481,31 @@ def main(argv=None) -> int:
                     help="bootstrap ensemble size B (--measure bootstrap)")
     ap.add_argument("--tree-depth", type=int, default=3,
                     help="bootstrap tree depth (--measure bootstrap)")
+    # trace replay / load testing (repro.telemetry.replay)
+    ap.add_argument("--replay", default="",
+                    help="replay a JSONL trace file, or synthesize one "
+                         "with loadgen:<workload> (steady|bursty|diurnal|"
+                         "zipf, --steps ops, --sessions tenants)")
+    ap.add_argument("--speedup", default="inf",
+                    help="compress the trace's inter-arrival times by "
+                         "this factor; 'inf' (default) replays "
+                         "back-to-back (deterministic, CI mode)")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="latency SLO in ms; report the fraction of "
+                         "replayed ops whose sojourn exceeds it "
+                         "(0 = no SLO)")
+    ap.add_argument("--rate", type=float, default=2000.0,
+                    help="loadgen mean arrival rate, ops/s of the trace "
+                         "clock (rescaled by --speedup)")
+    ap.add_argument("--auto-tune", action="store_true",
+                    help="with --replay: fit the per-(op, capacity-"
+                         "bucket) cost model and use its suggest_chunk "
+                         "instead of the hand-tuned observe_many chunk")
+    ap.add_argument("--cost-model", default="",
+                    help="load a fitted cost model JSON instead of "
+                         "fitting/calibrating one")
+    ap.add_argument("--cost-model-out", default="",
+                    help="save the fitted cost model JSON here")
     # telemetry (repro.telemetry) — serving modes only
     ap.add_argument("--metrics-out", default="",
                     help="write the end-of-run metrics snapshot to this "
@@ -402,6 +518,10 @@ def main(argv=None) -> int:
                          "jax.profiler.TraceAnnotation scopes")
     args = ap.parse_args(argv)
 
+    if args.replay:
+        if args.measure:
+            raise SystemExit("--replay and --measure are exclusive")
+        return _serve_replay(args)
     if args.sessions > 0:
         if args.measure:
             if args.regression:

@@ -74,13 +74,14 @@ class RegressionServingEngine:
                 into a lazy accumulator — drain with
                 ``engine.telemetry.drain()``. Bit-identical to the
                 uninstrumented engine (tested); ``metrics`` / ``tracer``
-                as in ``serving.engine.ServingEngine``.
+                / ``sync_timing`` as in ``serving.engine.ServingEngine``.
     """
 
     def __init__(self, *, n_sessions: int, capacity: int, dim: int, k: int,
                  window: int | None = None, dtype=jnp.float32,
                  donate: bool = True, layout: str = "ring",
-                 instrument: bool = False, metrics=None, tracer=None):
+                 instrument: bool = False, metrics=None, tracer=None,
+                 sync_timing: bool = False):
         if window is not None and window > capacity:
             raise ValueError(f"window {window} exceeds capacity {capacity}")
         if window is not None and window < 1:
@@ -117,6 +118,7 @@ class RegressionServingEngine:
             from repro.telemetry import EngineTelemetry
             self.telemetry = EngineTelemetry(
                 engine="regression", metrics=metrics, tracer=tracer,
+                sync=sync_timing,
                 n_of=lambda s: s.n, head_of=lambda s: s.head,
                 wrap_of=lambda s: s.wrap)
         vstep = jax.vmap(step, in_axes=(0, 0, 0, 0, 0, 0))
@@ -210,8 +212,9 @@ class RegressionServingEngine:
         T, S = xs.shape[:2]
         with self.telemetry.timed(op, signature=(xs.shape, self.capacity),
                                   ticks=T, tenants=S,
-                                  capacity=self.capacity):
+                                  capacity=self.capacity) as tm:
             state, (p, stats) = self._step_many(*args)
+            tm.sync(p)
         self.telemetry.ticks.fold(stats)
         return state, p
 
@@ -264,8 +267,8 @@ class RegressionServingEngine:
         with self.telemetry.timed("intervals",
                                   signature=(X_test.shape, self.capacity),
                                   tenants=self.n_sessions,
-                                  capacity=self.capacity):
-            return self._intervals(state, X_test, eps)
+                                  capacity=self.capacity) as tm:
+            return tm.sync(self._intervals(state, X_test, eps))
 
     def pvalues(self, state: RegStreamState, X_test,
                 t_query) -> jnp.ndarray:
@@ -278,8 +281,8 @@ class RegressionServingEngine:
         with self.telemetry.timed("pvalues",
                                   signature=(X_test.shape, self.capacity),
                                   tenants=self.n_sessions,
-                                  capacity=self.capacity):
-            return self._pvalues(state, X_test, t_query)
+                                  capacity=self.capacity) as tm:
+            return tm.sync(self._pvalues(state, X_test, t_query))
 
     # -- snapshot -----------------------------------------------------------
 

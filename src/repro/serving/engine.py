@@ -90,13 +90,18 @@ class ServingEngine:
                 process-wide registry). Only read when ``instrument``.
     tracer:     optional ``telemetry.Tracer`` — one JSONL record per
                 engine dispatch. Only read when ``instrument``.
+    sync_timing: with ``instrument``: block until the device finishes
+                inside each timed op, so the latency histograms and
+                trace records (``dispatch_s``) are device-true instead
+                of enqueue time. Used by the replay harness; leave off
+                on the serving hot path (it serializes dispatches).
     """
 
     def __init__(self, *, n_sessions: int, capacity: int, dim: int, k: int,
                  n_labels: int = 2, window: int | None = None,
                  dtype=jnp.float32, donate: bool = True,
                  layout: str = "ring", instrument: bool = False,
-                 metrics=None, tracer=None):
+                 metrics=None, tracer=None, sync_timing: bool = False):
         if window is not None and window > capacity:
             raise ValueError(f"window {window} exceeds capacity {capacity}")
         if window is not None and window < 1:
@@ -134,6 +139,7 @@ class ServingEngine:
             from repro.telemetry import EngineTelemetry
             self.telemetry = EngineTelemetry(
                 engine="classification", metrics=metrics, tracer=tracer,
+                sync=sync_timing,
                 n_of=lambda s: s.knn.n, head_of=lambda s: s.head,
                 wrap_of=lambda s: s.wrap)
         vstep = jax.vmap(step, in_axes=(0, 0, 0, 0, 0, 0))
@@ -218,8 +224,9 @@ class ServingEngine:
         T, S = xs.shape[:2]
         with self.telemetry.timed(op, signature=(xs.shape, self.capacity),
                                   ticks=T, tenants=S,
-                                  capacity=self.capacity):
+                                  capacity=self.capacity) as tm:
             state, (p, stats) = self._step_many(*args)
+            tm.sync(p)
         self.telemetry.ticks.fold(stats)
         return state, p
 
@@ -270,8 +277,8 @@ class ServingEngine:
         with self.telemetry.timed("predict",
                                   signature=(X_test.shape, self.capacity),
                                   tenants=self.n_sessions,
-                                  capacity=self.capacity):
-            return self._predict(state, X_test)
+                                  capacity=self.capacity) as tm:
+            return tm.sync(self._predict(state, X_test))
 
     # -- snapshot -----------------------------------------------------------
 

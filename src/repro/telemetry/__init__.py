@@ -16,6 +16,16 @@ Four pieces, composable and individually optional:
   coverage vs 1-eps, a vectorized p-value-uniformity (ECDF/KS)
   statistic, and the exchangeability drift martingales, all surfaced
   as metrics instead of one-shot prints.
+* ``loadgen``  — synthetic trace generators (steady / bursty /
+  diurnal / zipf-tenant-skewed) emitting the same schema the tracer
+  records, so generated and recorded traces are interchangeable
+  replay inputs.
+* ``replay``   — drive either serving engine from a trace, preserving
+  (or compressing) inter-arrival timing; reports p50/p99 per-op
+  latency, steps/s, queue depth and SLO-violation fraction.
+* ``costmodel``— per-(op, capacity-bucket) latency model fitted from
+  any trace; ``suggest_chunk`` / ``suggest_buckets`` replace the
+  hand-tuned observe_many chunk size and power-of-two bucketing.
 
 The engines accept ``instrument=True`` (plus optional ``metrics=`` /
 ``tracer=``) and stay bit-identical to the uninstrumented path — the
@@ -26,18 +36,24 @@ from repro.telemetry.metrics import (Counter, Gauge, Histogram,
                                      MetricsRegistry, get_registry,
                                      set_registry)
 from repro.telemetry.tracer import (OP_KINDS, TRACE_SCHEMA, Tracer,
-                                    capacity_bucket, read_trace,
-                                    validate_record, validate_trace_file)
+                                    capacity_bucket, iter_trace,
+                                    read_trace, validate_record,
+                                    validate_trace_file, write_trace)
 from repro.telemetry.device import TickStats, make_chunk_stats_fn
 from repro.telemetry.hooks import EngineTelemetry
 from repro.telemetry.validity import (CoverageMonitor, DriftMonitor,
                                       UniformityMonitor)
+from repro.telemetry.costmodel import CostModel, fit_cost_model
+from repro.telemetry import loadgen
+from repro.telemetry.replay import ReplayResult, calibrate_engine, replay
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "get_registry",
     "set_registry",
-    "OP_KINDS", "TRACE_SCHEMA", "Tracer", "capacity_bucket", "read_trace",
-    "validate_record", "validate_trace_file",
+    "OP_KINDS", "TRACE_SCHEMA", "Tracer", "capacity_bucket", "iter_trace",
+    "read_trace", "validate_record", "validate_trace_file", "write_trace",
     "TickStats", "make_chunk_stats_fn", "EngineTelemetry",
     "CoverageMonitor", "DriftMonitor", "UniformityMonitor",
+    "CostModel", "fit_cost_model", "loadgen",
+    "ReplayResult", "calibrate_engine", "replay",
 ]

@@ -11,12 +11,19 @@
   ``telemetry.device`` folded into a lazy device accumulator
   (``.ticks``); ``drain()`` publishes them.
 
-The timing wrapper never forces a device sync: ``wall_s`` is host wall
-time around the (async) dispatch. Loops that synchronize per call
-(fetching p-values each tick) therefore get device-true histograms; a
-fire-and-forget caller measures enqueue time, which the trace schema
-documents. This is what keeps the instrumented hot path inside the
-<= 5 % overhead budget that CI enforces.
+The timing wrapper never forces a device sync by default: ``wall_s`` is
+host wall time around the (async) dispatch. Loops that synchronize per
+call (fetching p-values each tick) therefore get device-true
+histograms; a fire-and-forget caller measures enqueue time, which the
+trace schema documents. This is what keeps the instrumented hot path
+inside the <= 5 % overhead budget that CI enforces.
+
+``sync=True`` opts into device-true timing: the engines hand each
+dispatch's output to the yielded handle's ``sync()``, which blocks
+until the device finishes *inside* the timed region and stamps the
+trace record's ``dispatch_s``. The replay harness uses this — replayed
+p50/p99 must measure the device, not the enqueue — while the serving
+hot path keeps the default fire-and-forget wrapper.
 """
 from __future__ import annotations
 
@@ -29,6 +36,30 @@ from repro.telemetry.metrics import MetricsRegistry, get_registry
 from repro.telemetry.tracer import Tracer
 
 
+class _TimedHandle:
+    """Yielded by ``EngineTelemetry.timed``; carries late record fields.
+
+    ``sync(value)`` is the engines' synchronization hook: a no-op
+    pass-through under the default fire-and-forget timing, a
+    ``block_until_ready`` (stamping ``dispatch_s``) when the telemetry
+    was built with ``sync=True``.
+    """
+
+    __slots__ = ("_sync", "_t0", "late")
+
+    def __init__(self, sync_enabled: bool, t0: float):
+        self._sync = sync_enabled
+        self._t0 = t0
+        self.late: dict[str, Any] = {}
+
+    def sync(self, value):
+        if self._sync:
+            import jax
+            jax.block_until_ready(value)
+            self.late["dispatch_s"] = time.perf_counter() - self._t0
+        return value
+
+
 class EngineTelemetry:
     """Instrumentation state attached to one serving engine."""
 
@@ -36,10 +67,11 @@ class EngineTelemetry:
                  head_of: Callable | None = None,
                  wrap_of: Callable | None = None,
                  metrics: MetricsRegistry | None = None,
-                 tracer: Tracer | None = None):
+                 tracer: Tracer | None = None, sync: bool = False):
         self.engine = engine
         self.metrics = metrics if metrics is not None else get_registry()
         self.tracer = tracer
+        self.sync = sync
         # device tick stats need the state accessors; host-only callers
         # (e.g. the registry serving loop) skip them and get timing only
         if n_of is not None:
@@ -59,7 +91,8 @@ class EngineTelemetry:
 
     def record_op(self, op: str, wall_s: float, *, compile_flag: bool,
                   ticks: int | None = None, tenants: int | None = None,
-                  capacity: int | None = None) -> None:
+                  capacity: int | None = None,
+                  dispatch_s: float | None = None) -> None:
         m = self.metrics
         m.counter("engine_ops_total", op=op, engine=self.engine).inc()
         suffix = "compile_s" if compile_flag else "wall_s"
@@ -68,13 +101,16 @@ class EngineTelemetry:
         if self.tracer is not None:
             self.tracer.record(op, wall_s, compile=compile_flag,
                                ticks=ticks, tenants=tenants,
-                               capacity=capacity, engine=self.engine)
+                               capacity=capacity, engine=self.engine,
+                               dispatch_s=dispatch_s)
 
     @contextlib.contextmanager
     def timed(self, op: str, *, signature: Any = None,
               ticks: int | None = None, tenants: int | None = None,
               capacity: int | None = None):
-        """Time one engine dispatch (no forced sync; see module doc)."""
+        """Time one engine dispatch (no forced sync unless the engine
+        routes its output through the yielded handle's ``sync()`` and
+        this telemetry was built with ``sync=True``; see module doc)."""
         compile_flag = self.first_call(op, signature)
         ann = contextlib.nullcontext()
         if self.tracer is not None and self.tracer.annotate:
@@ -82,14 +118,16 @@ class EngineTelemetry:
             ann = TraceAnnotation(f"repro.{op}")
         with ann:
             t0 = time.perf_counter()
-            yield
+            handle = _TimedHandle(self.sync, t0)
+            yield handle
             wall = time.perf_counter() - t0
         self.record_op(op, wall, compile_flag=compile_flag, ticks=ticks,
-                       tenants=tenants, capacity=capacity)
+                       tenants=tenants, capacity=capacity,
+                       dispatch_s=handle.late.get("dispatch_s"))
 
     def drain(self) -> dict[str, int]:
         """Publish accumulated device tick stats (one host sync)."""
         return self.ticks.drain() if self.ticks is not None else {}
 
 
-__all__ = ["EngineTelemetry"]
+__all__ = ["EngineTelemetry", "_TimedHandle"]

@@ -42,10 +42,17 @@ def _label_key(labels: dict[str, Any]) -> tuple:
     return tuple(sorted((k, str(v)) for k, v in labels.items()))
 
 
+def _escape_label_value(v: str) -> str:
+    """Prometheus exposition-format label-value escaping: backslash,
+    double quote and newline must be escaped (in that order — escaping
+    the backslash first keeps the other escapes unambiguous)."""
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
 def _label_str(labels: tuple) -> str:
     if not labels:
         return ""
-    inner = ",".join(f'{k}="{v}"' for k, v in labels)
+    inner = ",".join(f'{k}="{_escape_label_value(v)}"' for k, v in labels)
     return "{" + inner + "}"
 
 
@@ -139,9 +146,14 @@ class Histogram:
         return self.count - self.counts[-1] < rank and self.counts[-1] > 0
 
     def snapshot(self) -> dict[str, Any]:
+        # ``empty`` makes the zero-observation edge explicit: every
+        # quantile/min/max below is NaN by definition, not by accident,
+        # and downstream consumers can branch on the flag instead of
+        # NaN-sniffing.
         return {
             "count": self.count,
             "sum": self.sum,
+            "empty": self.count == 0,
             "min": self.min if self.count else math.nan,
             "max": self.max if self.count else math.nan,
             "p50": self.quantile(0.5),
@@ -210,7 +222,14 @@ class MetricsRegistry:
                 lines.append(
                     f"{m.name}{ls} count={s['count']} sum={s['sum']:.6g} "
                     f"p50={s['p50']:.6g} p99={s['p99']:.6g} "
-                    f"max={s['max']:.6g}")
+                    f"max={s['max']:.6g}"
+                    + (" empty=1" if s["empty"] else ""))
+                # proper exposition series: rates (rate(name_count)) and
+                # averages (name_sum / name_count) stay computable by
+                # standard prometheus tooling, which cannot parse the
+                # human-readable summary line above
+                lines.append(f"{m.name}_count{ls} {s['count']}")
+                lines.append(f"{m.name}_sum{ls} {s['sum']:.9g}")
             else:
                 v = m.value
                 vs = f"{v:.6g}" if isinstance(v, float) else str(v)

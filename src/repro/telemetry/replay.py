@@ -1,0 +1,347 @@
+"""Trace replay harness: re-drive the serving engines from a trace.
+
+The decoding half of the tracer: a recorded (``serve.py --trace-out``)
+or generated (``telemetry.loadgen``) JSONL trace is replayed against
+either serving engine — classification (``repro.serving``) or
+regression (``repro.regression``) — preserving the trace's
+inter-arrival timing (or compressing it via ``speedup``), and reporting
+what the ROADMAP's load story needs: p50/p99 per-op latency
+(device-true — the engines run with ``sync_timing=True``), session
+steps/s, queue depth, and the SLO-violation fraction, all through the
+ordinary ``MetricsRegistry``.
+
+Semantics
+---------
+* A record's ``t`` is its *arrival* on the trace clock; replay arrival
+  is ``t / speedup``. The loop sleeps until a batch's last arrival,
+  dispatches synchronously, and measures each record's **sojourn**
+  (completion - arrival): queueing delay during bursts shows up in the
+  p99 exactly as it would in a live server. ``speedup=inf`` drops the
+  clock entirely (every op back-to-back): sojourns then equal service
+  times and queue depth degenerates to the remaining backlog — the
+  right mode for determinism tests and CI, documented as such.
+* Replayed traffic is synthesized deterministically from ``(seed,
+  record seq, tick)`` — same trace + same seed => bit-identical final
+  engine state, independent of wall-clock jitter and of the
+  ``chunk`` coalescing below (chunking is bit-neutral by the engines'
+  observe_many property).
+* ``chunk=N`` coalesces runs of consecutive single-tick ``observe``
+  records into one ``observe_many`` dispatch of up to N ticks — the
+  knob ``costmodel.suggest_chunk`` tunes. Records keep their own
+  arrival times, so batching's latency cost (early arrivals wait for
+  the batch to fill) is measured, not hidden.
+* Ops with no engine counterpart on the vmapped path (``fit``,
+  ``evict`` — eviction is the sliding window's job — ``grow``,
+  ``snapshot_*``) are skipped and counted in
+  ``replay_skipped_ops_total``. Read ops map onto the engine's read
+  path (classification: ``predict``; regression: ``intervals``).
+"""
+from __future__ import annotations
+
+import io
+import math
+import time
+from typing import Any, Iterable
+
+import numpy as np
+
+from repro.telemetry.metrics import MetricsRegistry
+from repro.telemetry.tracer import Tracer
+
+_DRIVE_OPS = frozenset({"observe", "observe_many"})
+_READ_OPS = frozenset({"predict", "intervals", "pvalues"})
+
+
+class ReplayResult:
+    """Outcome of one replay: the report dict, final engine state, and
+    the engine/metrics that produced it (for determinism checks and
+    follow-up reads)."""
+
+    def __init__(self, report: dict[str, Any], state, engine, metrics):
+        self.report = report
+        self.state = state
+        self.engine = engine
+        self.metrics = metrics
+
+
+def _make_engine(kind: str, *, tenants, capacity, window, dim, k,
+                 n_labels, metrics, tracer):
+    if kind == "regression":
+        from repro.regression import RegressionServingEngine
+        return RegressionServingEngine(
+            n_sessions=tenants, capacity=capacity, dim=dim, k=k,
+            window=window, instrument=True, metrics=metrics,
+            tracer=tracer, sync_timing=True)
+    from repro.serving import ServingEngine
+    return ServingEngine(
+        n_sessions=tenants, capacity=capacity, dim=dim, k=k,
+        n_labels=n_labels, window=window, instrument=True,
+        metrics=metrics, tracer=tracer, sync_timing=True)
+
+
+def _tick_traffic(seed: int, seq: int, tick: int, S: int, dim: int,
+                  kind: str):
+    """One tick of deterministic synthetic traffic for record ``seq``."""
+    rng = np.random.default_rng((seed, seq, tick))
+    x = rng.standard_normal((S, dim)).astype(np.float32)
+    if kind == "regression":
+        y = rng.standard_normal(S).astype(np.float32)
+    else:
+        y = (rng.random(S) < 0.5).astype(np.int32)
+    tau = rng.random(S).astype(np.float32)
+    return x, y, tau
+
+
+def _plan_batches(records: list[dict[str, Any]],
+                  chunk: int | None) -> list[list[int]]:
+    """Group record indices into dispatch batches.
+
+    Read ops and multi-tick observe_many records dispatch alone;
+    consecutive single-tick observes coalesce up to ``chunk``.
+    """
+    batches: list[list[int]] = []
+    run: list[int] = []
+    for i, rec in enumerate(records):
+        single_obs = rec["op"] == "observe" and rec.get("ticks", 1) == 1
+        if chunk and chunk > 1 and single_obs:
+            run.append(i)
+            if len(run) >= chunk:
+                batches.append(run)
+                run = []
+            continue
+        if run:
+            batches.append(run)
+            run = []
+        batches.append([i])
+    if run:
+        batches.append(run)
+    return batches
+
+
+def replay(records: Iterable[dict[str, Any]], *,
+           engine: str = "classification", dim: int = 8, k: int = 7,
+           n_labels: int = 2, capacity: int | None = None,
+           window: int | None = None, speedup: float = math.inf,
+           seed: int = 0, slo_s: float | None = None,
+           chunk: int | None = None, eps: float = 0.1,
+           metrics: MetricsRegistry | None = None,
+           tracer: Tracer | None = None) -> ReplayResult:
+    """Replay a trace against one engine; see module doc for semantics.
+
+    ``records`` may be a list or a generator (``tracer.iter_trace``);
+    geometry defaults come from the trace (``tenants`` / ``capacity``
+    maxima), overridable per argument. ``slo_s`` is the default latency
+    objective; a record's own ``slo_s`` field wins. Returns a
+    ``ReplayResult`` whose ``report`` carries p50/p99 per op, steps/s,
+    queue depth, and the SLO-violation fraction.
+    """
+    if speedup <= 0:
+        raise ValueError("speedup must be > 0 (math.inf compresses)")
+    metrics = metrics if metrics is not None else MetricsRegistry()
+    all_recs = list(records)
+    played = [r for r in all_recs if r["op"] in _DRIVE_OPS | _READ_OPS]
+    for r in all_recs:
+        if r["op"] not in _DRIVE_OPS | _READ_OPS:
+            metrics.counter("replay_skipped_ops_total", op=r["op"]).inc()
+    if not played:
+        raise ValueError("trace contains no replayable ops")
+
+    S = max(int(r.get("tenants", 1)) for r in played)
+    cap = capacity or max((int(r.get("capacity", 0)) for r in played),
+                          default=0) or 128
+    cap = max(cap, k + 1)
+    window = window if window is not None else max(k, cap // 2)
+    eng = _make_engine(engine, tenants=S, capacity=cap, window=window,
+                       dim=dim, k=k, n_labels=n_labels, metrics=metrics,
+                       tracer=tracer)
+    batches = _plan_batches(played, chunk)
+
+    # ---- compile warmup: one throwaway dispatch per distinct shape ---------
+    # signature so every timed dispatch below is steady-state. Warmup
+    # traffic comes from a disjoint seq namespace; the warmed state is
+    # discarded (the engines donate their inputs, so we chain through).
+    tick_counts = sorted({
+        sum(played[i].get("ticks", 1) for i in b)
+        for b in batches if played[b[0]]["op"] in _DRIVE_OPS})
+    warm_state = eng.init_state()
+    for wi, T in enumerate(tick_counts):
+        xs, ys, taus = _stack_ticks(
+            [(10 ** 9 + wi, j) for j in range(T)], seed, S, dim, engine)
+        warm_state, _ = eng.observe_many(warm_state, xs, ys, taus)
+    if any(played[b[0]]["op"] in _READ_OPS for b in batches):
+        _read(eng, warm_state, engine, seed, 10 ** 9, dim, eps)
+    del warm_state
+    eng.reset_occupancy()
+
+    state = eng.init_state()
+    arrivals = ([0.0] * len(played) if math.isinf(speedup)
+                else [r["t"] / speedup for r in played])
+    qhist = metrics.histogram(
+        "replay_queue_depth",
+        bounds=tuple(float(2 ** e) for e in range(0, 17)))
+    slo_total = 0
+    slo_checked = 0
+    ticks_total = 0
+    steps_total = 0
+    arrived_ptr = 0
+    completed = 0
+    t0 = time.perf_counter()
+    for batch in batches:
+        recs = [played[i] for i in batch]
+        op = recs[0]["op"]
+        last_arr = arrivals[batch[-1]]
+        if not math.isinf(speedup):
+            wait = last_arr - (time.perf_counter() - t0)
+            if wait > 0:
+                time.sleep(wait)
+        now = time.perf_counter() - t0
+        while arrived_ptr < len(played) and arrivals[arrived_ptr] <= now:
+            arrived_ptr += 1
+        qhist.observe(max(arrived_ptr, batch[-1] + 1) - completed)
+
+        d0 = time.perf_counter()
+        if op in _DRIVE_OPS:
+            keys = [(played[i]["seq"], j) for i in batch
+                    for j in range(played[i].get("ticks", 1))]
+            xs, ys, taus = _stack_ticks(keys, seed, S, dim, engine)
+            active = _stack_active(
+                [played[i] for i in batch], S)
+            state, _p = eng.observe_many(state, xs, ys, taus,
+                                         active=active)
+            ticks_total += len(keys)
+            steps_total += int(active.sum())
+        else:
+            _read(eng, state, engine, seed, recs[0]["seq"], dim, eps)
+        done = time.perf_counter() - t0
+        service = time.perf_counter() - d0
+
+        for i in batch:
+            rec = played[i]
+            sojourn = (service if math.isinf(speedup)
+                       else done - arrivals[i])
+            metrics.histogram("replay_sojourn_s", op=rec["op"]).observe(
+                sojourn)
+            metrics.counter("replay_ops_total", op=rec["op"]).inc()
+            slo = rec.get("slo_s", slo_s)
+            if slo is not None:
+                slo_checked += 1
+                if sojourn > slo:
+                    slo_total += 1
+        completed += len(batch)
+    wall = time.perf_counter() - t0
+
+    # ---- report ------------------------------------------------------------
+    engine_label = ("regression" if engine == "regression"
+                    else "classification")
+    per_op: dict[str, dict[str, float]] = {}
+    for op in sorted({r["op"] for r in played}):
+        eng_op = _engine_op(op, engine)
+        h = metrics.histogram(f"engine_{eng_op}_wall_s",
+                              engine=engine_label)
+        s = metrics.histogram("replay_sojourn_s", op=op).snapshot()
+        per_op[op] = {
+            "p50_s": h.quantile(0.5), "p99_s": h.quantile(0.99),
+            "sojourn_p50_s": s["p50"], "sojourn_p99_s": s["p99"],
+            "count": s["count"],
+        }
+    viol_frac = slo_total / slo_checked if slo_checked else math.nan
+    metrics.counter("replay_slo_violations_total").inc(slo_total)
+    metrics.gauge("replay_slo_violation_frac").set(viol_frac)
+    metrics.gauge("replay_wall_s").set(wall)
+    metrics.gauge("replay_steps_per_s").set(
+        steps_total / wall if wall > 0 else math.nan)
+    metrics.gauge("replay_ticks_total").set(ticks_total)
+    metrics.gauge("replay_queue_depth_max").set(
+        qhist.max if qhist.count else 0.0)
+    report = {
+        "engine": engine,
+        "tenants": S,
+        "capacity": cap,
+        "window": window,
+        "ops_replayed": len(played),
+        "ops_skipped": len(all_recs) - len(played),
+        "ticks": ticks_total,
+        "session_steps": steps_total,
+        "wall_s": wall,
+        "steps_per_s": steps_total / wall if wall > 0 else math.nan,
+        "speedup": speedup,
+        "chunk": chunk,
+        "slo_s": slo_s,
+        "slo_violation_frac": viol_frac,
+        "queue_depth_max": float(qhist.max) if qhist.count else 0.0,
+        "per_op": per_op,
+    }
+    return ReplayResult(report, state, eng, metrics)
+
+
+def _engine_op(trace_op: str, engine: str) -> str:
+    """The engine op a trace op lands on (reads are remapped)."""
+    if trace_op in _DRIVE_OPS:
+        return "observe_many"
+    return "intervals" if engine == "regression" else "predict"
+
+
+def _stack_ticks(keys: list[tuple[int, int]], seed: int, S: int, dim: int,
+                 kind: str):
+    cols = [_tick_traffic(seed, sq, j, S, dim, kind) for sq, j in keys]
+    xs = np.stack([c[0] for c in cols])
+    ys = np.stack([c[1] for c in cols])
+    taus = np.stack([c[2] for c in cols])
+    return xs, ys, taus
+
+
+def _stack_active(recs: list[dict[str, Any]], S: int) -> np.ndarray:
+    rows = []
+    for rec in recs:
+        T = rec.get("ticks", 1)
+        if "active" in rec:
+            row = np.zeros(S, bool)
+            row[[s for s in rec["active"] if s < S]] = True
+        else:
+            row = np.ones(S, bool)
+        rows.extend([row] * T)
+    return np.stack(rows)
+
+
+def _read(eng, state, kind: str, seed: int, seq: int, dim: int,
+          eps: float, m: int = 4):
+    rng = np.random.default_rng((seed, seq))
+    xq = rng.standard_normal((m, dim)).astype(np.float32)
+    if kind == "regression":
+        return eng.intervals(state, xq, eps)
+    return eng.predict(state, xq)
+
+
+def calibrate_engine(engine: str = "classification", *, tenants: int = 8,
+                     capacity: int = 128, window: int | None = None,
+                     dim: int = 8, k: int = 7, n_labels: int = 2,
+                     chunks: tuple[int, ...] = (1, 4, 16, 64),
+                     reps: int = 3, seed: int = 0) -> list[dict[str, Any]]:
+    """Probe observe_many at several chunk lengths; return the trace.
+
+    The quick way to get timing data when the input trace has none (a
+    loadgen trace records arrivals, not costs): a few synchronized
+    dispatches per chunk length, recorded through the ordinary tracer,
+    ready for ``costmodel.CostModel.fit``. Compile dispatches are
+    flagged as such and excluded by the fit.
+    """
+    import json as _json
+
+    buf = io.StringIO()
+    tr = Tracer(buf)
+    window = window if window is not None else max(k, capacity // 2)
+    eng = _make_engine(engine, tenants=tenants, capacity=capacity,
+                       window=window, dim=dim, k=k, n_labels=n_labels,
+                       metrics=MetricsRegistry(), tracer=tr)
+    state = eng.init_state()
+    for ci, T in enumerate(sorted(set(chunks))):
+        for r in range(reps + 1):  # +1: the compile rep, flagged
+            xs, ys, taus = _stack_ticks(
+                [(ci * (reps + 1) + r, j) for j in range(T)],
+                seed, tenants, dim, engine)
+            state, _ = eng.observe_many(state, xs, ys, taus)
+    tr.close()
+    return [_json.loads(line) for line in buf.getvalue().splitlines()]
+
+
+__all__ = ["ReplayResult", "replay", "calibrate_engine"]

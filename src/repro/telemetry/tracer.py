@@ -9,16 +9,19 @@ Schema (``TRACE_SCHEMA``) — every record carries the required fields;
 optional fields appear when the recorder knows them:
 
 required
-    schema      int   trace format version (== SCHEMA_VERSION)
+    schema      int   trace format version (<= SCHEMA_VERSION; v1 files
+                      stay readable — v2 only *adds* optional fields)
     seq         int   per-tracer monotone record index
-    t           float seconds since tracer start (host clock)
+    t           float seconds since tracer start (host clock). Replay
+                      treats this as the op's arrival time.
     op          str   one of OP_KINDS
     wall_s      float host wall time around the dispatch. JAX dispatch
                       is async: unless the caller synchronized, this is
                       enqueue + host-side time, not device time (the
                       per-op histogram of synchronized loops — e.g. the
                       launcher's per-tick loop, which fetches p-values
-                      every tick — is device-true).
+                      every tick — is device-true). Generated (loadgen)
+                      traces write 0.0 — no timing was observed.
 optional
     compile     bool  first call at this (op, shape signature): wall_s
                       includes XLA compile ("compile-vs-steady" flag)
@@ -28,7 +31,16 @@ optional
     cap_bucket  int   next_pow2(capacity) — the retrace bucket
     engine      str   "classification" | "regression" | "registry"
     dispatch_s  float device-synchronized time, when the caller timed a
-                      ``block_until_ready`` explicitly
+                      ``block_until_ready`` explicitly (the engines set
+                      it under ``sync_timing=True``)
+optional, schema v2 (replay/loadgen)
+    workload    str   synthetic-trace generator kind (telemetry.loadgen)
+    active      list  tenant slots active on this tick (ints); absent
+                      means all ``tenants`` slots are active
+    slo_s       float per-op latency objective; replay counts a
+                      violation when sojourn (completion - arrival)
+                      exceeds it
+    seed        int   generator seed (synthetic traces)
     extra: any remaining keys are recorder-specific (e.g. drained device
     counters on a flush record) and must be JSON-serializable.
 
@@ -43,7 +55,7 @@ import os
 import time
 from typing import Any, IO
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 OP_KINDS = (
     "observe", "observe_many", "predict", "intervals", "pvalues",
@@ -54,7 +66,12 @@ _REQUIRED = {"schema": int, "seq": int, "t": float, "op": str,
              "wall_s": float}
 _OPTIONAL = {"compile": bool, "tenants": int, "ticks": int,
              "capacity": int, "cap_bucket": int, "engine": str,
-             "dispatch_s": float}
+             "dispatch_s": float,
+             # v2 (replay/loadgen) fields — all optional, so v1 readers
+             # that ignore unknown keys keep working and v1 files
+             # validate unchanged
+             "workload": str, "active": list, "slo_s": float,
+             "seed": int}
 
 TRACE_SCHEMA = {"version": SCHEMA_VERSION, "required": _REQUIRED,
                 "optional": _OPTIONAL, "op_kinds": OP_KINDS}
@@ -78,9 +95,9 @@ def validate_record(rec: dict[str, Any]) -> None:
             raise ValueError(
                 f"trace field {k!r} has type {type(v).__name__}, "
                 f"expected {ty.__name__}: {rec}")
-    if rec["schema"] != SCHEMA_VERSION:
-        raise ValueError(f"trace schema {rec['schema']} != "
-                         f"{SCHEMA_VERSION}")
+    if not 1 <= rec["schema"] <= SCHEMA_VERSION:
+        raise ValueError(f"trace schema {rec['schema']} not in "
+                         f"1..{SCHEMA_VERSION}")
     if rec["op"] not in OP_KINDS:
         raise ValueError(f"unknown trace op {rec['op']!r} "
                          f"(known: {OP_KINDS})")
@@ -93,29 +110,78 @@ def validate_record(rec: dict[str, Any]) -> None:
                 raise ValueError(
                     f"trace field {k!r} has type {type(v).__name__}, "
                     f"expected {ty.__name__}: {rec}")
+    if "active" in rec and not all(
+            isinstance(s, int) and not isinstance(s, bool) and s >= 0
+            for s in rec["active"]):
+        raise ValueError(f"trace field 'active' must hold non-negative "
+                         f"tenant indices: {rec['active']}")
+
+
+def iter_trace(path: str, *, validate: bool = True):
+    """Stream a JSONL trace file one record at a time.
+
+    A generator, so replaying a multi-GB trace never loads the whole
+    file into memory. ``validate=True`` (default) applies the same
+    per-record schema check as ``validate_trace_file`` plus the seq
+    monotonicity invariant; ``validate=False`` is the raw parse.
+    """
+    seq = -1
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            if validate:
+                validate_record(rec)
+                if rec["seq"] <= seq:
+                    raise ValueError(
+                        f"trace seq not monotone at {rec['seq']}")
+                seq = rec["seq"]
+            yield rec
 
 
 def read_trace(path: str) -> list[dict[str, Any]]:
     """Load a JSONL trace file (no validation; see validate_trace_file)."""
-    out = []
-    with open(path) as f:
-        for line in f:
-            line = line.strip()
-            if line:
-                out.append(json.loads(line))
-    return out
+    return list(iter_trace(path, validate=False))
 
 
 def validate_trace_file(path: str) -> list[dict[str, Any]]:
     """Read + schema-validate every record; returns the records."""
-    recs = read_trace(path)
+    return list(iter_trace(path, validate=True))
+
+
+def write_trace(path_or_file: str | IO[str],
+                records: "list[dict[str, Any]]") -> int:
+    """Write pre-built records (e.g. a loadgen trace) as JSONL.
+
+    Unlike ``Tracer.record`` the records' ``t``/``seq`` are taken as
+    given — synthetic traces carry *arrival* times, not recording
+    times. Every record is schema-validated; returns the record count.
+    """
     seq = -1
-    for rec in recs:
-        validate_record(rec)
-        if rec["seq"] <= seq:
-            raise ValueError(f"trace seq not monotone at {rec['seq']}")
-        seq = rec["seq"]
-    return recs
+    f: IO[str]
+    if isinstance(path_or_file, str):
+        d = os.path.dirname(path_or_file)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        f = open(path_or_file, "w")
+        owns = True
+    else:
+        f, owns = path_or_file, False
+    try:
+        n = 0
+        for rec in records:
+            validate_record(rec)
+            if rec["seq"] <= seq:
+                raise ValueError(f"trace seq not monotone at {rec['seq']}")
+            seq = rec["seq"]
+            f.write(json.dumps(rec) + "\n")
+            n += 1
+        return n
+    finally:
+        if owns:
+            f.close()
 
 
 class Tracer:
@@ -243,5 +309,5 @@ class _OpContext:
 
 
 __all__ = ["SCHEMA_VERSION", "OP_KINDS", "TRACE_SCHEMA", "Tracer",
-           "capacity_bucket", "validate_record", "read_trace",
-           "validate_trace_file"]
+           "capacity_bucket", "validate_record", "iter_trace",
+           "read_trace", "validate_trace_file", "write_trace"]

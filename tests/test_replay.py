@@ -1,0 +1,342 @@
+"""Replay harness, load generators, cost model (repro.telemetry).
+
+The acceptance-critical properties:
+* every loadgen workload emits schema-valid, strictly-ordered,
+  byte-deterministic traces interchangeable with recorded ones;
+* replaying the same trace twice (fixed seed, speedup=inf) leaves the
+  engine in a bit-identical final state with identical step counts,
+  and ``chunk`` coalescing does not change that state (it rides the
+  engines' observe_many == observe x T property);
+* the cost model recovers planted affine coefficients, its JSON
+  round-trip is bitwise, and ``suggest_chunk`` / ``suggest_buckets``
+  invert the model as documented;
+* ``launch/serve.py --replay`` runs end-to-end for both engines.
+"""
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.telemetry import (CostModel, MetricsRegistry, calibrate_engine,
+                             iter_trace, loadgen, replay, validate_record,
+                             write_trace)
+
+GEO = dict(ops=48, tenants=3, capacity=16)
+ENG = dict(dim=4, k=3)
+
+# ---------------------------------------------------------------- loadgen
+
+
+def test_loadgen_all_workloads_schema_valid():
+    for w in loadgen.WORKLOADS:
+        recs = loadgen.generate(w, **GEO, seed=3, slo_s=0.05,
+                                predict_every=8)
+        assert len(recs) == GEO["ops"]
+        for r in recs:
+            validate_record(r)
+            assert r["workload"] == w and r["seed"] == 3
+            assert r["slo_s"] == 0.05
+        ts = [r["t"] for r in recs]
+        assert all(b > a for a, b in zip(ts, ts[1:]))
+        ops = [r["op"] for r in recs]
+        assert "observe" in ops and "predict" in ops
+        # one read per predict_every observes, never back-to-back reads
+        assert ops.count("predict") == GEO["ops"] // 9
+
+
+def test_loadgen_deterministic_in_seed():
+    a = loadgen.generate("bursty", **GEO, seed=7)
+    b = loadgen.generate("bursty", **GEO, seed=7)
+    c = loadgen.generate("bursty", **GEO, seed=8)
+    assert a == b
+    assert a != c
+
+
+def test_loadgen_zipf_active_subsets_are_skewed():
+    recs = loadgen.generate("zipf", ops=256, tenants=8, capacity=16,
+                            seed=0, predict_every=0)
+    counts = np.zeros(8)
+    for r in recs:
+        assert len(r["active"]) == 4  # zipf_active_frac=0.5 of 8
+        assert r["active"] == sorted(set(r["active"]))
+        counts[r["active"]] += 1
+    # Zipf(1.2) weights: rank 0 must dominate rank 7 by a wide margin
+    assert counts[0] > 2 * counts[7]
+
+
+def test_loadgen_regression_trace_reads_intervals():
+    recs = loadgen.generate("steady", **GEO, engine="regression", seed=0)
+    assert {r["op"] for r in recs} == {"observe", "intervals"}
+
+
+def test_loadgen_rejects_unknown_workload():
+    with pytest.raises(ValueError):
+        loadgen.generate("tsunami", **GEO)
+
+
+# ------------------------------------------------- trace streaming I/O
+
+
+def test_write_then_iter_trace_roundtrip(tmp_path):
+    recs = loadgen.generate("diurnal", **GEO, seed=1)
+    p = str(tmp_path / "t.jsonl")
+    assert write_trace(p, recs) == len(recs)
+    assert list(iter_trace(p)) == recs
+
+
+def test_iter_trace_rejects_non_monotone_seq(tmp_path):
+    recs = loadgen.generate("steady", ops=4, tenants=1, capacity=8)
+    recs[2]["seq"] = recs[1]["seq"]
+    p = str(tmp_path / "t.jsonl")
+    with open(p, "w") as f:
+        for r in recs:
+            f.write(json.dumps(r) + "\n")
+    with pytest.raises(ValueError, match="monotone"):
+        list(iter_trace(p))
+    # validation off: the stream passes through
+    assert len(list(iter_trace(p, validate=False))) == 4
+
+
+def test_iter_trace_rejects_invalid_record(tmp_path):
+    p = str(tmp_path / "t.jsonl")
+    with open(p, "w") as f:
+        f.write(json.dumps({"schema": 2, "seq": 0, "t": 0.0}) + "\n")
+    with pytest.raises(ValueError):
+        list(iter_trace(p))
+
+
+# ----------------------------------------------------------------- replay
+
+
+def _leaves_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+@pytest.fixture(scope="module")
+def bursty_trace():
+    return loadgen.generate("bursty", **GEO, seed=5, predict_every=8)
+
+
+@pytest.fixture(scope="module")
+def bursty_replayed(bursty_trace):
+    return replay(bursty_trace, **ENG, seed=0)
+
+
+def test_replay_twice_is_bit_identical(bursty_trace, bursty_replayed):
+    again = replay(bursty_trace, **ENG, seed=0)
+    assert _leaves_equal(bursty_replayed.state, again.state)
+    for key in ("ops_replayed", "ticks", "session_steps", "tenants",
+                "capacity"):
+        assert bursty_replayed.report[key] == again.report[key]
+
+
+def test_replay_chunk_coalescing_is_bit_neutral(bursty_trace,
+                                                bursty_replayed):
+    chunked = replay(bursty_trace, **ENG, seed=0, chunk=8)
+    assert _leaves_equal(bursty_replayed.state, chunked.state)
+    assert chunked.report["ticks"] == bursty_replayed.report["ticks"]
+
+
+def test_replay_seed_changes_traffic(bursty_trace, bursty_replayed):
+    other = replay(bursty_trace, **ENG, seed=1)
+    assert not _leaves_equal(bursty_replayed.state, other.state)
+
+
+def test_replay_report_and_metrics(bursty_trace, bursty_replayed):
+    rep = bursty_replayed.report
+    n_obs = sum(r["op"] == "observe" for r in bursty_trace)
+    assert rep["ops_replayed"] == len(bursty_trace)
+    assert rep["ticks"] == n_obs
+    assert rep["session_steps"] == n_obs * GEO["tenants"]
+    assert rep["steps_per_s"] > 0
+    assert set(rep["per_op"]) == {"observe", "predict"}
+    for d in rep["per_op"].values():
+        assert 0 < d["p50_s"] <= d["p99_s"]
+        assert d["sojourn_p99_s"] > 0
+    names = {m["name"]
+             for m in bursty_replayed.metrics.to_dict()["metrics"]}
+    assert {"replay_sojourn_s", "replay_queue_depth",
+            "replay_steps_per_s", "replay_slo_violation_frac",
+            "replay_ops_total"} <= names
+
+
+def test_replay_slo_accounting(bursty_trace):
+    # speedup=inf: sojourn == service time, strictly positive on CPU
+    tight = replay(bursty_trace, **ENG, seed=0, slo_s=1e-12).report
+    loose = replay(bursty_trace, **ENG, seed=0, slo_s=1e3).report
+    assert tight["slo_violation_frac"] == 1.0
+    assert loose["slo_violation_frac"] == 0.0
+    # no SLO anywhere: the fraction is undefined, not zero
+    assert math.isnan(replay(bursty_trace, **ENG,
+                             seed=0).report["slo_violation_frac"])
+
+
+def test_replay_zipf_masks_drive_step_counts():
+    recs = loadgen.generate("zipf", **GEO, seed=2, predict_every=0)
+    rep = replay(recs, **ENG, seed=0).report
+    assert rep["session_steps"] == sum(
+        len(r["active"]) for r in recs if r["op"] == "observe")
+
+
+def test_replay_regression_engine(bursty_trace):
+    recs = loadgen.generate("steady", **GEO, engine="regression", seed=4,
+                            predict_every=12)
+    res = replay(recs, engine="regression", **ENG, seed=0)
+    assert res.report["engine"] == "regression"
+    assert set(res.report["per_op"]) == {"intervals", "observe"}
+    assert res.report["ticks"] > 0
+
+
+def test_replay_skips_unreplayable_ops(bursty_trace):
+    recs = list(bursty_trace) + [{
+        "schema": 2, "seq": bursty_trace[-1]["seq"] + 1,
+        "t": bursty_trace[-1]["t"] + 1.0, "op": "snapshot_save",
+        "wall_s": 0.0}]
+    rep = replay(recs, **ENG, seed=0).report
+    assert rep["ops_skipped"] == 1
+    assert rep["ops_replayed"] == len(bursty_trace)
+
+
+def test_replay_rejects_empty_and_bad_speedup(bursty_trace):
+    with pytest.raises(ValueError):
+        replay([], **ENG)
+    with pytest.raises(ValueError):
+        replay(bursty_trace, **ENG, speedup=0.0)
+
+
+# -------------------------------------------------------------- costmodel
+
+
+def _synth_records(a, b, *, ticks=(1, 4, 16, 64), reps=3, bucket=32,
+                   engine="classification"):
+    recs = []
+    for i, t in enumerate(ticks):
+        for r in range(reps):
+            recs.append({"seq": i * reps + r, "op": "observe_many",
+                         "ticks": t, "wall_s": a + b * t,
+                         "cap_bucket": bucket, "engine": engine})
+    return recs
+
+
+def test_costmodel_fit_recovers_planted_affine():
+    a, b = 2e-4, 5e-5
+    m = CostModel.fit(_synth_records(a, b))
+    e = m.entries[("classification", "observe_many", 32)]
+    assert e["a"] == pytest.approx(a, rel=1e-6)
+    assert e["b"] == pytest.approx(b, rel=1e-6)
+    assert m.predict("observe_many", ticks=10,
+                     cap_bucket=32) == pytest.approx(a + 10 * b, rel=1e-6)
+
+
+def test_costmodel_excludes_compile_and_zero_wall():
+    recs = _synth_records(1e-4, 1e-5)
+    recs[0]["compile"] = True
+    recs[0]["wall_s"] = 50.0  # would wreck the fit if included
+    recs.append({"seq": 99, "op": "observe_many", "ticks": 1,
+                 "wall_s": 0.0, "cap_bucket": 32,
+                 "engine": "classification"})
+    e = CostModel.fit(recs).entries[("classification", "observe_many", 32)]
+    assert e["a"] == pytest.approx(1e-4, rel=1e-6)
+
+
+def test_costmodel_suggest_chunk_inverts_model():
+    a, b = 3e-4, 2e-5
+    m = CostModel.fit(_synth_records(a, b))
+    f = 0.05
+    want = math.ceil(a * (1 - f) / (b * f))
+    assert m.suggest_chunk(cap_bucket=32, overhead_frac=f) == want
+    # amortized overhead share at the suggested chunk is at most f
+    t = m.suggest_chunk(cap_bucket=32, overhead_frac=f)
+    assert a / (a + b * t) <= f * 1.01
+    # unresolvable marginal cost: chunk as much as allowed
+    flat = CostModel({("classification", "observe_many", 32):
+                      {"a": 1e-3, "b": 0.0, "n": 4.0}})
+    assert flat.suggest_chunk(cap_bucket=32, max_chunk=256) == 256
+    with pytest.raises(ValueError):
+        m.suggest_chunk(cap_bucket=32, overhead_frac=1.5)
+    with pytest.raises(KeyError):
+        m.suggest_chunk("nonexistent_op", cap_bucket=32)
+
+
+def test_costmodel_roundtrip_is_bitwise(tmp_path):
+    # awkward floats on purpose: shortest-repr JSON must round-trip them
+    m = CostModel({
+        ("classification", "observe_many", 32):
+            {"a": 1 / 3, "b": 2.2250738585072014e-308, "n": 7.0},
+        ("regression", "intervals", 128):
+            {"a": 0.1 + 0.2, "b": 0.0, "n": 3.0},
+    }, meta={"source": "test"})
+    p = str(tmp_path / "cm.json")
+    m.save(p)
+    back = CostModel.load(p)
+    assert back.entries == m.entries  # dict == is exact float equality
+    assert back.meta == m.meta
+    assert CostModel.from_json(m.to_json()).entries == m.entries
+
+
+def test_costmodel_version_gate():
+    with pytest.raises(ValueError):
+        CostModel.from_json({"version": 999, "entries": []})
+
+
+def test_costmodel_suggest_buckets_linear_cost_doubles():
+    # b scales linearly with bucket => alpha == 1 => growth == cost_ratio
+    entries = {("", "observe_many", c): {"a": 0.0, "b": 1e-6 * c, "n": 3.0}
+               for c in (32, 64, 128, 256)}
+    m = CostModel(entries)
+    _, alpha = m.fit_capacity_scaling()
+    assert alpha == pytest.approx(1.0, abs=1e-9)
+    assert m.suggest_buckets(cap_min=32, cap_max=256) == [32, 64, 128, 256]
+    with pytest.raises(ValueError):
+        m.suggest_buckets(cap_min=0, cap_max=8)
+    with pytest.raises(ValueError):
+        m.suggest_buckets(cap_min=8, cap_max=64, cost_ratio=1.0)
+
+
+def test_calibrate_engine_yields_fittable_records():
+    recs = calibrate_engine("classification", tenants=2, capacity=16,
+                            dim=4, k=3, chunks=(1, 8), reps=2, seed=0)
+    for r in recs:
+        validate_record(r)
+    m = CostModel.fit(recs, source="test")
+    key = ("classification", "observe_many", 16)
+    assert key in m.entries and m.entries[key]["b"] >= 0.0
+    assert 1 <= m.suggest_chunk(cap_bucket=16) <= 1024
+
+
+# ---------------------------------------------------- serve.py --replay
+
+
+def test_serve_replay_cli_classification(tmp_path, capsys):
+    from repro.launch import serve
+
+    mpath = str(tmp_path / "m.json")
+    rc = serve.main(["--replay", "loadgen:bursty", "--steps", "32",
+                     "--sessions", "3", "--dim", "4", "--k", "3",
+                     "--capacity", "16", "--slo-ms", "1000",
+                     "--metrics-out", mpath])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "replay loadgen:bursty -> classification engine" in out
+    assert "SLO 1000ms" in out
+    names = {m["name"] for m in json.load(open(mpath))["metrics"]}
+    assert "replay_steps_per_s" in names
+
+
+def test_serve_replay_cli_regression_from_file(tmp_path, capsys):
+    from repro.launch import serve
+
+    recs = loadgen.generate("zipf", ops=24, tenants=3, capacity=16,
+                            engine="regression", seed=6)
+    tpath = str(tmp_path / "t.jsonl")
+    write_trace(tpath, recs)
+    rc = serve.main(["--replay", tpath, "--regression", "--dim", "4",
+                     "--k", "3", "--speedup", "500"])
+    assert rc == 0
+    assert "-> regression engine" in capsys.readouterr().out

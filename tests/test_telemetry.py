@@ -80,6 +80,38 @@ def test_histogram_rejects_bad_bounds_and_quantiles():
         h.quantile(1.5)
 
 
+def test_empty_histogram_flagged_in_snapshot_and_text():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_s")
+    s = h.snapshot()
+    assert s["empty"] is True
+    assert math.isnan(h.quantile(0.5))
+    assert "empty=1" in reg.to_text()
+    h.observe(1.0)
+    assert h.snapshot()["empty"] is False
+    assert "empty=1" not in reg.to_text()
+
+
+def test_label_values_escaped_in_exposition_format():
+    reg = MetricsRegistry()
+    reg.counter("c_total", path='a"b\\c\nd').inc()
+    text = reg.to_text()
+    # backslash, quote and newline escape per the exposition format —
+    # and the snapshot stays one-line-per-series parseable
+    assert r'path="a\"b\\c\nd"' in text
+    assert len(text.splitlines()) == 1
+
+
+def test_histogram_emits_sum_count_series():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_s", op="observe")
+    h.observe(1.0)
+    h.observe(3.0)
+    text = reg.to_text()
+    assert 'lat_s_count{op="observe"} 2' in text
+    assert 'lat_s_sum{op="observe"} 4' in text
+
+
 def test_registry_export_roundtrip(tmp_path):
     reg = MetricsRegistry()
     reg.counter("a_total", engine="classification").inc(4)
