@@ -1,10 +1,50 @@
-"""Benchmark harness utilities: compile-excluded wall timing, CSV rows."""
+"""Benchmark harness utilities: compile-excluded wall timing, CSV rows,
+and bench_kind-scoped row merging for the shared BENCH_serve.json."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import numpy as np
+
+
+def merge_bench_rows(out: str, rows: list[dict], *,
+                     owned_prefixes: tuple[str, ...]) -> dict:
+    """Replace one bench's rows of ``out`` in place, keep the rest.
+
+    Several bench modules share BENCH_serve.json; each owns a disjoint
+    family of rows identified by ``bench_kind`` prefix. A row is owned
+    (and therefore replaced by this call) iff its ``bench_kind`` matches
+    one of ``owned_prefixes``: the empty prefix ``""`` owns exactly the
+    rows with no/empty ``bench_kind`` (the historic un-kinded
+    throughput grid), while a non-empty prefix owns every row whose
+    kind starts with it (``"replay"`` owns ``replay`` and
+    ``replay_autotune``; ``"fleet"`` owns ``fleet_scaling`` and
+    ``fleet_lifecycle``). Rows owned by nobody in ``owned_prefixes``
+    are carried over untouched, so fleet rows survive a serve_bench
+    rewrite and vice versa.
+    """
+
+    def owned(kind: str) -> bool:
+        return any((kind == p) if p == "" else kind.startswith(p)
+                   for p in owned_prefixes)
+
+    if os.path.exists(out):
+        with open(out) as f:
+            payload = json.load(f)
+    else:
+        payload = {"bench": "serving_engine",
+                   "backend": jax.default_backend(),
+                   "device": str(jax.devices()[0]),
+                   "results": []}
+    payload["results"] = [
+        r for r in payload.get("results", [])
+        if not owned(str(r.get("bench_kind", "")))] + rows
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    return payload
 
 
 def timeit_compiled(fn, *args, repeats: int = 3, **kw):

@@ -24,9 +24,7 @@ owns the ``bench_kind: replay*`` rows):
 from __future__ import annotations
 
 import argparse
-import json
 import math
-import os
 
 
 def run_workloads(workloads=None, *, ops=256, tenants=8, capacity=128,
@@ -125,21 +123,11 @@ def run_autotune(*, ops=384, tenants=8, capacity=128, dim=8, k=7,
 
 def merge_rows(out: str, rows: list[dict]) -> dict:
     """Replace the ``replay*`` rows of ``out`` in place, keep the rest."""
-    if os.path.exists(out):
-        with open(out) as f:
-            payload = json.load(f)
-    else:
-        import jax
-        payload = {"bench": "serving_engine",
-                   "backend": jax.default_backend(),
-                   "device": str(jax.devices()[0]), "results": []}
-    payload["results"] = [
-        r for r in payload["results"]
-        if not str(r.get("bench_kind", "")).startswith("replay")
-    ] + rows
-    with open(out, "w") as f:
-        json.dump(payload, f, indent=2)
-    return payload
+    try:
+        from benchmarks.common import merge_bench_rows
+    except ImportError:
+        from common import merge_bench_rows
+    return merge_bench_rows(out, rows, owned_prefixes=("replay",))
 
 
 def main(argv=None) -> int:

@@ -15,6 +15,44 @@ import time
 from benchmarks.common import HEADER, row
 
 
+def _fleet_rows(quick: bool) -> list[str]:
+    """Run fleet_bench in a child process and render its rows as CSV."""
+    import json
+    import os
+    import subprocess
+    import tempfile
+
+    script = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "fleet_bench.py")
+    with tempfile.TemporaryDirectory() as td:
+        out = os.path.join(td, "fleet.json")
+        cmd = [sys.executable, script, "--out", out]
+        if quick:
+            cmd.append("--quick")
+        subprocess.run(cmd, check=True)
+        with open(out) as f:
+            results = json.load(f)["results"]
+    rows = []
+    for r in results:
+        if r["bench_kind"] == "fleet_scaling":
+            rows.append(row(
+                "fleet/scaling",
+                f"S={r['tenants']},shards={r['shards']}",
+                r["tenants"] / r["session_steps_per_s"],
+                f"steps={r['session_steps_per_s']:.0f}/s "
+                f"tick_p99={r['tick_p99_s'] * 1e3:.2f}ms "
+                f"speedup={r.get('shard_speedup_vs_1shard', 1):.2f}x "
+                f"cores={r['host_cores']}"))
+        elif r["bench_kind"] == "fleet_lifecycle":
+            rows.append(row(
+                "fleet/lifecycle", f"S={r['tenants']}",
+                r["observe_round_p50_s"],
+                f"admit={r['admit_s_per_tenant'] * 1e6:.0f}us "
+                f"migrations={r['migrations']} "
+                f"round_max={r['observe_round_max_s'] * 1e3:.0f}ms"))
+    return rows
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -99,6 +137,10 @@ def main(argv=None) -> int:
                 f"ratio={r['autotune_ratio']:.2f}x")
             for r in replay_bench.run_autotune(
                 ops=192 if args.quick else 384)],
+        # sharded-fleet scaling curve. Subprocessed: virtual host
+        # devices require XLA_FLAGS before jax's first import, and this
+        # module imported jax lines ago.
+        "fleet": lambda: _fleet_rows(args.quick),
         "roofline": lambda: roofline.run(mesh_filter=None),
     }
     only = set(args.only.split(",")) if args.only else set(suites)

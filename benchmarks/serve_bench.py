@@ -14,7 +14,6 @@ per-dispatch overhead (host round-trip + buffer shuffling) that
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
@@ -268,22 +267,15 @@ def main(argv=None) -> int:
     results += run_sliding((256, 1024) if args.quick
                            else (256, 1024, 4096))
     results += run_overhead(chunk=args.chunk)
-    # the replay rows (bench_kind replay*) belong to replay_bench.py —
-    # carry them over instead of dropping them on rewrite
-    import os
-    if os.path.exists(args.out):
-        with open(args.out) as f:
-            old = json.load(f).get("results", [])
-        results += [r for r in old
-                    if str(r.get("bench_kind", "")).startswith("replay")]
-    payload = {
-        "bench": "serving_engine",
-        "backend": jax.default_backend(),
-        "device": str(jax.devices()[0]),
-        "results": results,
-    }
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
+    # rows of other benches (replay* from replay_bench, fleet* from
+    # fleet_bench) are carried over, not clobbered
+    try:
+        from benchmarks.common import merge_bench_rows
+    except ImportError:
+        from common import merge_bench_rows
+    merge_bench_rows(args.out, results,
+                     owned_prefixes=("", "sliding_full_window",
+                                     "instrumentation_overhead"))
     print(f"[serve_bench] wrote {args.out}")
     return 0
 

@@ -21,6 +21,17 @@ single-host experiments.
 
 Everything here is exact: outputs equal the single-device optimized path
 (property-tested), which itself equals naive full CP.
+
+Beyond the calibration-row sharding above, this module also owns the
+**tenant-axis** sharding used by the serving engines
+(``serving.engine`` / ``regression.engine``): a multi-tenant tick is
+embarrassingly parallel across tenants (no cross-tenant communication),
+so the stacked session state shards along its leading axis over a 1-D
+``("tenants",)`` mesh and a tick runs as ONE shard_map'd dispatch with
+**zero collectives** in the body — each device advances its tenant
+slice with the exact same per-lane graph as the single-device vmap, so
+results are bit-identical leaf-for-leaf (property-tested in
+tests/test_distributed.py).
 """
 from __future__ import annotations
 
@@ -246,7 +257,100 @@ def make_kde_pvalues_fn(mesh, *, h: float, p_dim: int, n_labels: int,
     return pvalues
 
 
+# ---------------------------------------------------------------------------
+# tenant-axis sharding (the serving engines' multi-device path)
+# ---------------------------------------------------------------------------
+
+TENANT_AXIS = "tenants"
+
+
+def tenant_mesh(shards: int):
+    """1-D ``("tenants",)`` mesh over the first ``shards`` devices."""
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    if shards > len(devs):
+        raise ValueError(
+            f"shards={shards} exceeds the {len(devs)} visible device(s); "
+            "on CPU, force virtual devices with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            "before importing jax")
+    return Mesh(np.array(devs[:shards]), (TENANT_AXIS,))
+
+
+def tenant_spec(leaf) -> P:
+    """Leading-axis tenant PartitionSpec for one stacked state leaf."""
+    return P(TENANT_AXIS, *([None] * (np.ndim(leaf) - 1)))
+
+
+def put_tenant_sharded(tree, mesh):
+    """Place every leaf of a stacked state pytree with its leading axis
+    sharded across the tenant mesh (trailing axes replicated)."""
+    return jax.tree_util.tree_map(
+        lambda a: jax.device_put(a, NamedSharding(mesh, tenant_spec(a))),
+        tree)
+
+
+def pad_tenant_count(n: int, shards: int) -> int:
+    """Smallest multiple of ``shards`` >= n (the padded lane count).
+
+    Uneven tenant counts shard by padding with inactive lanes: padded
+    lanes stay at their init state (``active`` masks them out of every
+    tick), so the live lanes' results are unchanged — the padding-shard
+    case is property-tested in tests/test_distributed.py.
+    """
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    return -(-n // shards) * shards
+
+
+def shard_tenant_chunk(chunk, mesh, *, with_stats: bool):
+    """shard_map a ``scan_chunk`` tick body over the tenant mesh.
+
+    Inputs follow the engines' dispatch signature
+    ``(state, xs, ys, taus, windows, actives)``: state leaves and
+    ``windows`` shard their leading (S,) axis, the (T, S, ...) traffic
+    arrays shard axis 1. The body contains no collectives — every
+    device runs the unmodified chunk on its tenant slice, so the
+    composed jit(shard_map(chunk)) keeps buffer donation and
+    bit-exactness. With ``with_stats`` the chunk's (len(STAT_KEYS),)
+    telemetry vector comes back per shard as a (shards, len) stacked
+    array (still no collectives: the cross-shard merge is deferred to
+    ``telemetry.device.TickStats.drain``).
+    """
+    ax = TENANT_AXIS
+    in_specs = (P(ax), P(None, ax), P(None, ax), P(None, ax), P(ax),
+                P(None, ax))
+    if not with_stats:
+        return _shard_map(chunk, mesh, in_specs, (P(ax), P(None, ax)))
+
+    def body(state, xs, ys, taus, windows, actives):
+        out, (ps, st) = chunk(state, xs, ys, taus, windows, actives)
+        return out, (ps, st[None])  # (1, len): one stat row per shard
+
+    return _shard_map(body, mesh, in_specs,
+                      (P(ax), (P(None, ax), P(ax, None))))
+
+
+def shard_tenant_fn(fn, mesh, in_tenant, out_spec=None):
+    """shard_map a read-path fn whose args are tenant-stacked or global.
+
+    ``in_tenant`` is one bool per positional arg: True shards the arg's
+    leading axis across the tenant mesh, False replicates it (query
+    grids, traced scalars). The default out_spec shards the leading
+    axis of every output.
+    """
+    in_specs = tuple(P(TENANT_AXIS) if t else P() for t in in_tenant)
+    if out_spec is None:
+        out_spec = P(TENANT_AXIS)
+    return _shard_map(fn, mesh, in_specs, out_spec)
+
+
 __all__ = [
     "CpShardingConfig", "pad_rows", "shard_knn_state",
     "make_knn_pvalues_fn", "make_kde_pvalues_fn",
+    "TENANT_AXIS", "tenant_mesh", "tenant_spec", "put_tenant_sharded",
+    "pad_tenant_count", "shard_tenant_chunk", "shard_tenant_fn",
 ]

@@ -101,6 +101,26 @@ def _class_drift_traffic(args, S, T, dim):
     return X, y, taus, drifted
 
 
+def _check_shards(shards: int, sessions: int) -> None:
+    """CLI-friendly validation of --shards against --sessions and the
+    visible device count (engine ctors raise ValueError for the same)."""
+    if shards < 1:
+        raise SystemExit("--shards must be >= 1")
+    if shards == 1:
+        return
+    if sessions % shards:
+        raise SystemExit(
+            f"--sessions {sessions} is not divisible by --shards "
+            f"{shards}; pad the session count")
+    import jax
+
+    if shards > jax.device_count():
+        raise SystemExit(
+            f"--shards {shards} exceeds the {jax.device_count()} visible "
+            "device(s); on CPU, set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=N before launching")
+
+
 def _telemetry(args):
     """One metrics registry + optional JSONL tracer per serving run."""
     from repro.telemetry import MetricsRegistry, Tracer
@@ -170,20 +190,22 @@ def _serve_sessions(args) -> int:
     import jax
     import numpy as np
 
-    from repro.serving import ServingEngine, SessionStore
+    from repro.serving import ServingEngine
 
     metrics, tracer = _telemetry(args)
     S, T, dim = args.sessions, args.steps, args.dim
     if T < 2:
         raise SystemExit(
             "--steps must be >= 2 (tick 0 is the compile warmup)")
+    _check_shards(args.shards, S)
     eng = ServingEngine(
         n_sessions=S, capacity=args.capacity, dim=dim, k=args.k,
         n_labels=2, window=args.window, instrument=True, metrics=metrics,
-        tracer=tracer)
+        tracer=tracer, shards=args.shards)
     state = eng.init_state()
+    metrics.gauge("serve_shards", mode="classification").set(args.shards)
     print(f"[serve] engine: {S} sessions x cap {args.capacity} "
-          f"(window={args.window}, k={args.k})")
+          f"(window={args.window}, k={args.k}, shards={args.shards})")
 
     X, y, taus, drifted = _class_drift_traffic(args, S, T, dim)
     pvals = np.zeros((S, T), np.float32)
@@ -204,20 +226,36 @@ def _serve_sessions(args) -> int:
 
     rc = 0
     if args.snapshot_dir:
-        store = SessionStore(args.snapshot_dir, metrics=metrics,
-                             tracer=tracer)
-        store.save(T, state, meta=eng.meta(), blocking=True)
-        eng2, state2, step = store.restore_engine()
-        same = all(
-            np.array_equal(np.asarray(a), np.asarray(b))
-            for a, b in zip(jax.tree_util.tree_leaves(state),
-                            jax.tree_util.tree_leaves(state2)))
-        print(f"[serve] snapshot@step {step} -> restore "
-              f"{'bit-exact' if same else 'MISMATCH'}")
-        if not same:
-            rc = 1
+        rc = _snapshot_roundtrip(args, state, eng, metrics, tracer)
     _emit_report(args, metrics, tracer, mode="classification")
     return rc
+
+
+def _snapshot_roundtrip(args, state, eng, metrics, tracer) -> int:
+    """Save + restore the final state, asserting bit-exactness. With
+    ``--shards > 1`` the save goes through the async double-buffered
+    sharded saver (host I/O of shard i overlaps the device pull of
+    shard i+1 and any still-running compute)."""
+    import jax
+    import numpy as np
+
+    from repro.serving import AsyncShardedSaver, SessionStore
+
+    store = SessionStore(args.snapshot_dir, metrics=metrics, tracer=tracer)
+    if args.shards > 1:
+        saver = AsyncShardedSaver(store, args.shards, metrics=metrics)
+        saver.save(args.steps, state, meta=eng.meta())
+        saver.close()
+    else:
+        store.save(args.steps, state, meta=eng.meta(), blocking=True)
+    eng2, state2, step = store.restore_engine()
+    same = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(state),
+                        jax.tree_util.tree_leaves(state2)))
+    print(f"[serve] snapshot@step {step} -> restore "
+          f"{'bit-exact' if same else 'MISMATCH'}")
+    return 0 if same else 1
 
 
 def _serve_registry(args) -> int:
@@ -298,20 +336,21 @@ def _serve_regression(args) -> int:
     import numpy as np
 
     from repro.regression import RegressionServingEngine
-    from repro.serving import SessionStore
 
     metrics, tracer = _telemetry(args)
     S, T, dim = args.sessions, args.steps, args.dim
     if T < 2:
         raise SystemExit(
             "--steps must be >= 2 (tick 0 is the compile warmup)")
+    _check_shards(args.shards, S)
     eng = RegressionServingEngine(
         n_sessions=S, capacity=args.capacity, dim=dim, k=args.k,
         window=args.window, instrument=True, metrics=metrics,
-        tracer=tracer)
+        tracer=tracer, shards=args.shards)
     state = eng.init_state()
+    metrics.gauge("serve_shards", mode="regression").set(args.shards)
     print(f"[serve] regression engine: {S} sessions x cap {args.capacity} "
-          f"(window={args.window}, k={args.k})")
+          f"(window={args.window}, k={args.k}, shards={args.shards})")
 
     # per-tenant linear traffic y = <w_s, x> + noise; odd tenants change
     # their regression function at T/2 (streaming drift detection)
@@ -357,18 +396,7 @@ def _serve_regression(args) -> int:
 
     rc = 0
     if args.snapshot_dir:
-        store = SessionStore(args.snapshot_dir, metrics=metrics,
-                             tracer=tracer)
-        store.save(T, state, meta=eng.meta(), blocking=True)
-        eng2, state2, step = store.restore_engine()
-        same = all(
-            np.array_equal(np.asarray(a), np.asarray(b))
-            for a, b in zip(jax.tree_util.tree_leaves(state),
-                            jax.tree_util.tree_leaves(state2)))
-        print(f"[serve] snapshot@step {step} -> restore "
-              f"{'bit-exact' if same else 'MISMATCH'}")
-        if not same:
-            rc = 1
+        rc = _snapshot_roundtrip(args, state, eng, metrics, tracer)
     _emit_report(args, metrics, tracer, mode="regression")
     return rc
 
@@ -424,18 +452,28 @@ def _serve_replay(args) -> int:
         model.save(args.cost_model_out)
         print(f"[serve] cost model -> {args.cost_model_out}")
 
+    if args.shards > 1 and args.shards > tenants:
+        raise SystemExit(f"--shards {args.shards} exceeds the trace's "
+                         f"{tenants} tenants")
     metrics, tracer = _telemetry(args)
+    metrics.gauge("serve_shards", mode="replay").set(args.shards)
     res = replay(records, engine=kind, dim=args.dim, k=args.k,
                  window=min(args.window, cap),  # trace may be smaller
                  speedup=speedup, seed=args.seed,
                  slo_s=slo_s, chunk=chunk, eps=args.eps, metrics=metrics,
-                 tracer=tracer)
+                 tracer=tracer, shards=args.shards)
     rep = res.report
     print(f"[serve] replay {src} -> {kind} engine "
-          f"({rep['tenants']} tenants x cap {rep['capacity']}): "
+          f"({rep['tenants']} tenants x cap {rep['capacity']}, "
+          f"{rep['shards']} shard(s)): "
           f"{rep['ops_replayed']} ops ({rep['ops_skipped']} skipped), "
           f"{rep['ticks']} ticks in {rep['wall_s']:.3f}s "
           f"({rep['steps_per_s']:.0f} session steps/s)")
+    if rep["shards"] > 1:
+        for sh in rep["per_shard"]:
+            print(f"  shard {sh['shard']}: {sh['tenants']} tenants, "
+                  f"{sh['session_steps']} steps, occupancy mean "
+                  f"{sh['occupancy_mean']:.1f} max {sh['occupancy_max']}")
     for op, d in rep["per_op"].items():
         print(f"  {op:12s} p50={d['p50_s'] * 1e3:8.3f}ms "
               f"p99={d['p99_s'] * 1e3:8.3f}ms "
@@ -470,6 +508,14 @@ def main(argv=None) -> int:
     ap.add_argument("--drift", type=float, default=2.0)
     ap.add_argument("--log-threshold", type=float, default=2.0)
     ap.add_argument("--snapshot-dir", default="")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard the session axis across N devices "
+                         "(engine modes: one shard_map'd dispatch per "
+                         "tick, bit-identical to --shards 1; replay "
+                         "mode: N per-shard engines with merged "
+                         "metrics). On CPU, force virtual devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N")
     ap.add_argument("--regression", action="store_true",
                     help="with --sessions: serve streaming regression CP "
                          "(prediction intervals) instead of classification")

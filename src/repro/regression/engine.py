@@ -75,13 +75,20 @@ class RegressionServingEngine:
                 ``engine.telemetry.drain()``. Bit-identical to the
                 uninstrumented engine (tested); ``metrics`` / ``tracer``
                 / ``sync_timing`` as in ``serving.engine.ServingEngine``.
+    shards:     partition the session axis across this many devices
+                (``core.distributed.tenant_mesh``): state leaves get a
+                tenant-sharded ``NamedSharding`` and every dispatch runs
+                shard_map'd, one program per device with zero
+                cross-device collectives — bit-identical to the
+                single-device vmap (tested). ``n_sessions`` must divide
+                evenly; pad with inactive lanes otherwise.
     """
 
     def __init__(self, *, n_sessions: int, capacity: int, dim: int, k: int,
                  window: int | None = None, dtype=jnp.float32,
                  donate: bool = True, layout: str = "ring",
                  instrument: bool = False, metrics=None, tracer=None,
-                 sync_timing: bool = False):
+                 sync_timing: bool = False, shards: int = 1):
         if window is not None and window > capacity:
             raise ValueError(f"window {window} exceeds capacity {capacity}")
         if window is not None and window < 1:
@@ -90,6 +97,16 @@ class RegressionServingEngine:
             raise ValueError(f"capacity {capacity} < k {k}")
         if layout not in ("ring", "compact"):
             raise ValueError(f"unknown layout {layout!r}")
+        if shards > 1 and n_sessions % shards != 0:
+            raise ValueError(
+                f"n_sessions {n_sessions} not divisible by shards {shards};"
+                " pad with inactive lanes"
+                " (core.distributed.pad_tenant_count)")
+        self.shards = shards
+        self._mesh = None
+        if shards > 1:
+            from repro.core import distributed as dist
+            self._mesh = dist.tenant_mesh(shards)
         self.n_sessions = n_sessions
         self.capacity = capacity
         self.dim = dim
@@ -122,20 +139,30 @@ class RegressionServingEngine:
                 n_of=lambda s: s.n, head_of=lambda s: s.head,
                 wrap_of=lambda s: s.wrap)
         vstep = jax.vmap(step, in_axes=(0, 0, 0, 0, 0, 0))
-        self._step_many = jax.jit(
-            engine_utils.scan_chunk(
-                vstep, self.telemetry.stats_fn if instrument else None),
-            donate_argnums=(0,) if donate else ())
+        chunk = engine_utils.scan_chunk(
+            vstep, self.telemetry.stats_fn if instrument else None)
         # lax.map, not vmap: the scanned body keeps the exact per-session
         # graph, so served reads stay bit-identical to the single-session
         # path (vmap re-batches the distance GEMMs and count reductions,
         # which round differently at large capacities)
-        self._pvalues = jax.jit(lambda st, xt, tq: jax.lax.map(
+        pvals = lambda st, xt, tq: jax.lax.map(
             lambda args: sess_m.pvalues(args[0], args[1], tq, k=k),
-            (st, xt)))
-        self._intervals = jax.jit(lambda st, xt, eps: jax.lax.map(
+            (st, xt))
+        ivals = lambda st, xt, eps: jax.lax.map(
             lambda args: sess_m.intervals(args[0], args[1], k=k,
-                                          epsilon=eps), (st, xt)))
+                                          epsilon=eps), (st, xt))
+        if self._mesh is not None:
+            from repro.core import distributed as dist
+            chunk = dist.shard_tenant_chunk(chunk, self._mesh,
+                                            with_stats=instrument)
+            pvals = dist.shard_tenant_fn(pvals, self._mesh,
+                                         (True, True, False))
+            ivals = dist.shard_tenant_fn(ivals, self._mesh,
+                                         (True, True, False))
+        self._step_many = jax.jit(
+            chunk, donate_argnums=(0,) if donate else ())
+        self._pvalues = jax.jit(pvals)
+        self._intervals = jax.jit(ivals)
         self._n_bound: int | None = None
 
     # -- state --------------------------------------------------------------
@@ -148,9 +175,17 @@ class RegressionServingEngine:
         full capacity as the modulus (the ring never wraps there)."""
         one = sess_m.init(self.capacity, self.dim, self.k,
                           dtype=self.dtype, wrap=self._wmax)
-        return jax.tree_util.tree_map(
+        state = jax.tree_util.tree_map(
             lambda a: jnp.broadcast_to(a, (self.n_sessions,) + a.shape),
             one)
+        return self._shard_state(state)
+
+    def _shard_state(self, state: RegStreamState) -> RegStreamState:
+        """Lay the stacked state out tenant-sharded across the mesh."""
+        if self._mesh is None:
+            return state
+        from repro.core import distributed as dist
+        return dist.put_tenant_sharded(state, self._mesh)
 
     def taus(self, key) -> jnp.ndarray:
         """One tie-breaking uniform per session slot for this tick."""
@@ -246,7 +281,7 @@ class RegressionServingEngine:
                                  out.n, out.head, out.aid,
                                  jnp.full_like(out.wrap, self._wmax),
                                  out.nbr_a)
-        return out
+        return self._shard_state(out)
 
     def intervals(self, state: RegStreamState, X_test,
                   epsilon: float) -> jnp.ndarray:
@@ -296,6 +331,7 @@ class RegressionServingEngine:
             "k": self.k,
             "window": self.window,
             "dtype": jnp.dtype(self.dtype).name,
+            "shards": self.shards,
         }
 
     @classmethod
@@ -306,6 +342,11 @@ class RegressionServingEngine:
             raise ValueError(f"not a regression-engine meta: mode={mode!r}")
         meta.pop("n_labels", None)  # tolerate classification-era keys
         meta["dtype"] = jnp.dtype(meta.get("dtype", "float32"))
+        # restore sharded only when this host can honour it
+        shards = int(meta.pop("shards", 1))
+        if (shards > 1 and shards <= jax.device_count()
+                and meta["n_sessions"] % shards == 0):
+            meta["shards"] = shards
         return cls(**meta)
 
 

@@ -10,11 +10,15 @@ primitives into a serving system:
   step advances every tenant, Pallas-fused read-only queries;
 * ``registry`` — declarative measure registry (k-NN / KDE / LS-SVM and
   user plug-ins) behind one fit/observe/evict/pvalues surface;
-* ``snapshot`` — crash-safe tenant-state snapshot/restore.
+* ``snapshot`` — crash-safe tenant-state snapshot/restore, plus the
+  async double-buffered sharded saver;
+* ``fleet``    — tenant lifecycle (admit/retire/migrate) over
+  capacity-bucketed engine pools.
 """
 from repro.serving.engine import ServingEngine
+from repro.serving.fleet import Fleet
 from repro.serving.registry import ConformalPredictor, MeasureSpec
-from repro.serving.snapshot import SessionStore
+from repro.serving.snapshot import AsyncShardedSaver, SessionStore
 
 __all__ = ["ServingEngine", "ConformalPredictor", "MeasureSpec",
-           "SessionStore"]
+           "SessionStore", "AsyncShardedSaver", "Fleet"]

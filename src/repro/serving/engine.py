@@ -95,13 +95,23 @@ class ServingEngine:
                 trace records (``dispatch_s``) are device-true instead
                 of enqueue time. Used by the replay harness; leave off
                 on the serving hot path (it serializes dispatches).
+    shards:     shard the tenant axis across this many devices
+                (``core.distributed`` 1-D "tenants" mesh). A tick stays
+                ONE dispatch — shard_map'd, zero collectives in the
+                body — and every state leaf carries a tenant-sharded
+                NamedSharding; results are bit-identical to the
+                single-device vmap (property-tested). Requires
+                ``n_sessions % shards == 0`` (pad uneven tenant counts
+                with inactive lanes: ``distributed.pad_tenant_count``)
+                and ``shards <= jax.device_count()``.
     """
 
     def __init__(self, *, n_sessions: int, capacity: int, dim: int, k: int,
                  n_labels: int = 2, window: int | None = None,
                  dtype=jnp.float32, donate: bool = True,
                  layout: str = "ring", instrument: bool = False,
-                 metrics=None, tracer=None, sync_timing: bool = False):
+                 metrics=None, tracer=None, sync_timing: bool = False,
+                 shards: int = 1):
         if window is not None and window > capacity:
             raise ValueError(f"window {window} exceeds capacity {capacity}")
         if window is not None and window < 1:
@@ -110,6 +120,11 @@ class ServingEngine:
             raise ValueError(f"capacity {capacity} < k {k}")
         if layout not in ("ring", "compact"):
             raise ValueError(f"unknown layout {layout!r}")
+        if shards > 1 and n_sessions % shards != 0:
+            raise ValueError(
+                f"n_sessions {n_sessions} not divisible by shards "
+                f"{shards}; pad with inactive lanes "
+                "(core.distributed.pad_tenant_count)")
         self.n_sessions = n_sessions
         self.capacity = capacity
         self.dim = dim
@@ -119,6 +134,11 @@ class ServingEngine:
         self.dtype = dtype
         self.donate = donate
         self.layout = layout
+        self.shards = shards
+        self._mesh = None
+        if shards > 1:
+            from repro.core import distributed as dist
+            self._mesh = dist.tenant_mesh(shards)
         # the fused sliding step: evict-if-full + observe + active mask
         # in one pass; grow mode (window=None) statically drops the
         # eviction machinery. A sliding window statically bounds
@@ -143,12 +163,18 @@ class ServingEngine:
                 n_of=lambda s: s.knn.n, head_of=lambda s: s.head,
                 wrap_of=lambda s: s.wrap)
         vstep = jax.vmap(step, in_axes=(0, 0, 0, 0, 0, 0))
+        chunk = engine_utils.scan_chunk(
+            vstep, self.telemetry.stats_fn if instrument else None)
+        pred = jax.vmap(functools.partial(
+            sess_m.predict_pvalues, k=k, n_labels=n_labels))
+        if self._mesh is not None:
+            from repro.core import distributed as dist
+            chunk = dist.shard_tenant_chunk(chunk, self._mesh,
+                                            with_stats=instrument)
+            pred = dist.shard_tenant_fn(pred, self._mesh, (True, True))
         self._step_many = jax.jit(
-            engine_utils.scan_chunk(
-                vstep, self.telemetry.stats_fn if instrument else None),
-            donate_argnums=(0,) if donate else ())
-        self._predict = jax.jit(jax.vmap(functools.partial(
-            sess_m.predict_pvalues, k=k, n_labels=n_labels)))
+            chunk, donate_argnums=(0,) if donate else ())
+        self._predict = jax.jit(pred)
         # host-side upper bound on max_s n_s, for grow-mode occupancy
         # checks without a per-tick device sync
         self._n_bound: int | None = None
@@ -160,12 +186,21 @@ class ServingEngine:
 
         Sliding engines confine every session's ring to the
         ``[:window]`` leaf block (``wrap == wmax``); grow mode uses the
-        full capacity as the modulus (the ring never wraps there)."""
+        full capacity as the modulus (the ring never wraps there).
+        With ``shards > 1`` every leaf is placed with a tenant-sharded
+        NamedSharding across the mesh."""
         one = sess_m.init(self.capacity, self.dim, self.k,
                           dtype=self.dtype, wrap=self._wmax)
-        return jax.tree_util.tree_map(
+        state = jax.tree_util.tree_map(
             lambda a: jnp.broadcast_to(a, (self.n_sessions,) + a.shape),
             one)
+        return self._shard_state(state)
+
+    def _shard_state(self, state: Session) -> Session:
+        if self._mesh is None:
+            return state
+        from repro.core import distributed as dist
+        return dist.put_tenant_sharded(state, self._mesh)
 
     def taus(self, key) -> jnp.ndarray:
         """One tie-breaking uniform per session slot for this tick."""
@@ -259,7 +294,7 @@ class ServingEngine:
         if self._wmax is not None:
             out = Session(out.knn, out.D, out.head, out.aid,
                           jnp.full_like(out.wrap, self._wmax))
-        return out
+        return self._shard_state(out)
 
     def predict(self, state: Session, X_test) -> jnp.ndarray:
         """Read-only full-CP p-values per session: (S, m, n_labels).
@@ -292,12 +327,20 @@ class ServingEngine:
             "n_labels": self.n_labels,
             "window": self.window,
             "dtype": jnp.dtype(self.dtype).name,
+            "shards": self.shards,
         }
 
     @classmethod
     def from_meta(cls, meta: dict[str, Any]) -> "ServingEngine":
         meta = dict(meta)
         meta["dtype"] = jnp.dtype(meta.get("dtype", "float32"))
+        # a snapshot from a sharded fleet restores wherever it lands:
+        # fall back to a single device when the saved shard count is
+        # not available here (results are bit-identical either way)
+        shards = int(meta.pop("shards", 1))
+        if (shards > 1 and shards <= jax.device_count()
+                and meta["n_sessions"] % shards == 0):
+            meta["shards"] = shards
         return cls(**meta)
 
 

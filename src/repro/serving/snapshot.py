@@ -214,7 +214,107 @@ class SessionStore:
         else:
             engine = ServingEngine.from_meta(meta)
         state = _fit_ring_modulus(engine, state)
+        # a sharded engine serves sharded state: lay the restored leaves
+        # out across the tenant mesh (no-op for shards == 1)
+        state = engine._shard_state(state)
         return engine, state, step
 
 
-__all__ = ["SessionStore"]
+class AsyncShardedSaver:
+    """Double-buffered sharded snapshot pipeline over a ``SessionStore``.
+
+    Overlaps host I/O with device compute. ``save(step, state)`` slices
+    the stacked state into per-shard tenant blocks *on device* — the
+    slices are fresh buffers, so the serving loop is free to donate and
+    overwrite ``state`` on the very next tick — then hands them to a
+    background worker that pulls each shard to host in sequence
+    (``device_get`` of shard *i* overlaps the tick that is already
+    computing, and with one block per device the per-shard pulls drain
+    different devices back-to-back), reassembles the full host state,
+    and commits it through the store's atomic write path. A bounded
+    queue (default depth 2: one snapshot being written + one buffered)
+    gives double buffering with backpressure instead of unbounded
+    device-memory growth when snapshots outpace disk.
+
+    Worker errors surface on the *next* ``save``/``wait`` call — the
+    serving loop finds out, just not mid-tick. Always ``wait()`` (or
+    ``close()``) before reading the store back.
+    """
+
+    def __init__(self, store: SessionStore, shards: int, *, depth: int = 2,
+                 metrics=None):
+        import queue as _queue
+        import threading as _threading
+
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self.store = store
+        self.shards = shards
+        self._metrics = metrics
+        self._q: Any = _queue.Queue(maxsize=depth)
+        self._err: BaseException | None = None
+        self._worker = _threading.Thread(
+            target=self._run, name="sharded-snapshot-saver", daemon=True)
+        self._worker.start()
+
+    def _check_err(self) -> None:
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise RuntimeError("async snapshot save failed") from err
+
+    def save(self, step: int, state, *, meta: dict | None = None) -> None:
+        """Enqueue a snapshot of ``state`` (blocks only when the queue
+        is full — backpressure at ``depth`` in-flight snapshots)."""
+        self._check_err()
+        S = jax.tree_util.tree_leaves(state)[0].shape[0]
+        cuts = [S * i // self.shards for i in range(self.shards + 1)]
+        # device-side slicing: new buffers per shard, donation-safe
+        slices = [
+            jax.tree_util.tree_map(lambda l: l[cuts[i]:cuts[i + 1]], state)
+            for i in range(self.shards)]
+        self._q.put((step, slices, meta))
+
+    def _run(self) -> None:
+        import time as _time
+
+        import numpy as np
+
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            step, slices, meta = item
+            try:
+                t0 = _time.perf_counter()
+                host = [jax.device_get(s) for s in slices]  # shard-by-shard
+                full = jax.tree_util.tree_map(
+                    lambda *ls: np.concatenate(ls, axis=0), *host)
+                self.store.save(step, full, meta=meta, blocking=True)
+                if self._metrics is not None:
+                    self._metrics.histogram(
+                        "snapshot_async_save_s", shards=self.shards
+                    ).observe(_time.perf_counter() - t0)
+            except BaseException as e:  # surfaced on next save()/wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def wait(self) -> None:
+        """Block until every enqueued snapshot is committed."""
+        self._q.join()
+        self.store.wait()
+        self._check_err()
+
+    def close(self) -> None:
+        """Drain, stop the worker, and surface any pending error."""
+        self._q.put(None)
+        self._q.join()
+        self._worker.join()
+        self.store.wait()
+        self._check_err()
+
+
+__all__ = ["SessionStore", "AsyncShardedSaver"]

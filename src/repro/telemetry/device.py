@@ -120,12 +120,22 @@ class TickStats:
         self.engine = engine
         self._acc: Any | None = None
         self.totals: dict[str, int] = {k: 0 for k in STAT_KEYS}
+        # last drain's per-shard rows (sharded engines only): one
+        # {stat: int} dict per shard, in mesh order
+        self.shard_vals: list[dict[str, int]] = []
 
     def fold(self, vec: jnp.ndarray) -> None:
         if self._acc is None:
             self._acc = vec
         else:
             self._acc = _fold_into(self._acc, vec)
+
+    def reset(self) -> None:
+        """Discard the pending accumulator and totals without
+        publishing (e.g. to exclude warmup dispatches from a run)."""
+        self._acc = None
+        self.totals = {k: 0 for k in STAT_KEYS}
+        self.shard_vals = []
 
     def drain(self) -> dict[str, int]:
         """Sync + publish + reset; returns this drain's host values."""
@@ -134,6 +144,17 @@ class TickStats:
         import numpy as np
 
         host = np.asarray(self._acc)
+        if host.ndim == 2:
+            # sharded chunk: one row per shard (mesh order). Merge rows
+            # the same way ticks merge — sum, max for the watermarks —
+            # and keep the per-shard rows for occupancy reporting.
+            self.shard_vals = [
+                {k: int(row[i]) for i, k in enumerate(STAT_KEYS)}
+                for row in host]
+            merged = host.sum(axis=0)
+            for i in _MAX_MASK_IDX:
+                merged[i] = host[:, i].max()
+            host = merged
         vals = {k: int(host[i]) for i, k in enumerate(STAT_KEYS)}
         self._acc = None
         for k, v in vals.items():

@@ -69,6 +69,10 @@ class Counter:
             raise ValueError(f"counter {self.name} decremented by {v}")
         self.value += float(v)
 
+    def merge(self, other: "Counter") -> None:
+        """Fold another shard's counter in: counts sum."""
+        self.value += other.value
+
 
 class Gauge:
     """Last-write-wins instantaneous value."""
@@ -80,6 +84,23 @@ class Gauge:
 
     def set(self, v: float) -> None:
         self.value = float(v)
+
+    def merge(self, other: "Gauge", policy: str = "max") -> None:
+        """Fold another shard's gauge in. ``policy``: "max" (default —
+        watermarks), "min", "sum" (additive occupancy), or "last"
+        (other wins). An unset side (NaN) never clobbers a set one."""
+        if math.isnan(other.value):
+            return
+        if math.isnan(self.value) or policy == "last":
+            self.value = other.value
+        elif policy == "max":
+            self.value = max(self.value, other.value)
+        elif policy == "min":
+            self.value = min(self.value, other.value)
+        elif policy == "sum":
+            self.value += other.value
+        else:
+            raise ValueError(f"unknown gauge merge policy {policy!r}")
 
 
 class Histogram:
@@ -114,6 +135,25 @@ class Histogram:
         self.sum += v
         self.min = min(self.min, v)
         self.max = max(self.max, v)
+
+    def merge(self, other: "Histogram") -> None:
+        """Fold another shard's histogram in (bucket-wise adds).
+
+        Both histograms must share bucket boundaries — the merged
+        counts are then exactly the histogram of the union stream, so
+        quantile estimates degrade no further than either input's.
+        """
+        if other.bounds != self.bounds:
+            raise ValueError(
+                f"histogram {self.name}: cannot merge mismatched bucket "
+                f"boundaries ({len(self.bounds)} vs {len(other.bounds)} "
+                "edges)")
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.count += other.count
+        self.sum += other.sum
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
 
     def quantile(self, q: float) -> float:
         """Fixed-bucket quantile estimate of the q-th observation."""
@@ -187,6 +227,32 @@ class MetricsRegistry:
     def histogram(self, name: str, *, bounds=DEFAULT_LATENCY_BUCKETS,
                   **labels) -> Histogram:
         return self._get(Histogram, name, labels, bounds=bounds)
+
+    def merge(self, other: "MetricsRegistry", *,
+              gauge_policy: str = "max") -> "MetricsRegistry":
+        """Fold another registry's metrics into this one (returns self).
+
+        Counters sum, histograms add bucket-wise (matching boundaries
+        required), gauges merge under ``gauge_policy`` ("max" default,
+        or "min"/"sum"/"last"). Metric identity is (type, name,
+        labels) — disjoint series are adopted wholesale, shared series
+        merged value-wise. Identity: merging an empty registry is a
+        no-op. Commutative up to gauge policy: with "max"/"min"/"sum",
+        a.merge(b) and b.merge(a) agree on every counter, gauge, and
+        histogram value (tested). This is the sharded-replay collection
+        path: one registry per shard, merged into the report registry.
+        """
+        with other._lock:
+            theirs = list(other._metrics.items())
+        for key, m in theirs:
+            cls = type(m)
+            kw = {"bounds": m.bounds} if isinstance(m, Histogram) else {}
+            mine = self._get(cls, m.name, dict(m.labels), **kw)
+            if isinstance(m, Gauge):
+                mine.merge(m, policy=gauge_policy)
+            else:
+                mine.merge(m)
+        return self
 
     # -- export -------------------------------------------------------------
 

@@ -55,7 +55,10 @@ _READ_OPS = frozenset({"predict", "intervals", "pvalues"})
 class ReplayResult:
     """Outcome of one replay: the report dict, final engine state, and
     the engine/metrics that produced it (for determinism checks and
-    follow-up reads)."""
+    follow-up reads). Sharded replays (``shards > 1``) concatenate the
+    per-shard states back into the full (S, ...) tree — bit-identical
+    to the unsharded replay's state — and ``engine`` holds the list of
+    per-shard engines."""
 
     def __init__(self, report: dict[str, Any], state, engine, metrics):
         self.report = report
@@ -125,7 +128,7 @@ def replay(records: Iterable[dict[str, Any]], *,
            seed: int = 0, slo_s: float | None = None,
            chunk: int | None = None, eps: float = 0.1,
            metrics: MetricsRegistry | None = None,
-           tracer: Tracer | None = None) -> ReplayResult:
+           tracer: Tracer | None = None, shards: int = 1) -> ReplayResult:
     """Replay a trace against one engine; see module doc for semantics.
 
     ``records`` may be a list or a generator (``tracer.iter_trace``);
@@ -134,6 +137,16 @@ def replay(records: Iterable[dict[str, Any]], *,
     objective; a record's own ``slo_s`` field wins. Returns a
     ``ReplayResult`` whose ``report`` carries p50/p99 per op, steps/s,
     queue depth, and the SLO-violation fraction.
+
+    ``shards > 1`` partitions the tenant axis into contiguous groups,
+    replays each against its own engine with its own metrics registry
+    (the multi-process collection shape), and merges the per-shard
+    registries into one report via ``MetricsRegistry.merge``. Traffic
+    is still synthesized at full width and sliced per shard, and the
+    trace's ``active`` masks partition with the tenants, so the
+    concatenated final state is bit-identical to the unsharded replay
+    (tested). The report gains ``shards`` and ``per_shard`` (tenants,
+    session steps, occupancy per shard).
     """
     if speedup <= 0:
         raise ValueError("speedup must be > 0 (math.inf compresses)")
@@ -147,13 +160,20 @@ def replay(records: Iterable[dict[str, Any]], *,
         raise ValueError("trace contains no replayable ops")
 
     S = max(int(r.get("tenants", 1)) for r in played)
+    if not 1 <= shards <= S:
+        raise ValueError(f"shards {shards} outside [1, tenants={S}]")
     cap = capacity or max((int(r.get("capacity", 0)) for r in played),
                           default=0) or 128
     cap = max(cap, k + 1)
     window = window if window is not None else max(k, cap // 2)
-    eng = _make_engine(engine, tenants=S, capacity=cap, window=window,
-                       dim=dim, k=k, n_labels=n_labels, metrics=metrics,
-                       tracer=tracer)
+    cuts = [S * i // shards for i in range(shards + 1)]
+    shard_metrics = ([metrics] if shards == 1
+                     else [MetricsRegistry() for _ in range(shards)])
+    engs = [_make_engine(engine, tenants=cuts[i + 1] - cuts[i],
+                         capacity=cap, window=window, dim=dim, k=k,
+                         n_labels=n_labels, metrics=shard_metrics[i],
+                         tracer=tracer)
+            for i in range(shards)]
     batches = _plan_batches(played, chunk)
 
     # ---- compile warmup: one throwaway dispatch per distinct shape ---------
@@ -163,17 +183,24 @@ def replay(records: Iterable[dict[str, Any]], *,
     tick_counts = sorted({
         sum(played[i].get("ticks", 1) for i in b)
         for b in batches if played[b[0]]["op"] in _DRIVE_OPS})
-    warm_state = eng.init_state()
-    for wi, T in enumerate(tick_counts):
-        xs, ys, taus = _stack_ticks(
-            [(10 ** 9 + wi, j) for j in range(T)], seed, S, dim, engine)
-        warm_state, _ = eng.observe_many(warm_state, xs, ys, taus)
-    if any(played[b[0]]["op"] in _READ_OPS for b in batches):
-        _read(eng, warm_state, engine, seed, 10 ** 9, dim, eps)
-    del warm_state
-    eng.reset_occupancy()
+    warm_reads = any(played[b[0]]["op"] in _READ_OPS for b in batches)
+    for si, eng in enumerate(engs):
+        lo, hi = cuts[si], cuts[si + 1]
+        warm_state = eng.init_state()
+        for wi, T in enumerate(tick_counts):
+            xs, ys, taus = _stack_ticks(
+                [(10 ** 9 + wi, j) for j in range(T)], seed, S, dim,
+                engine)
+            warm_state, _ = eng.observe_many(
+                warm_state, xs[:, lo:hi], ys[:, lo:hi], taus[:, lo:hi])
+        if warm_reads:
+            _read(eng, warm_state, engine, seed, 10 ** 9, dim, eps)
+        del warm_state
+        eng.reset_occupancy()
+        if eng.telemetry is not None:  # keep warmup out of the tick stats
+            eng.telemetry.ticks.reset()
 
-    state = eng.init_state()
+    states = [eng.init_state() for eng in engs]
     arrivals = ([0.0] * len(played) if math.isinf(speedup)
                 else [r["t"] / speedup for r in played])
     qhist = metrics.histogram(
@@ -206,12 +233,17 @@ def replay(records: Iterable[dict[str, Any]], *,
             xs, ys, taus = _stack_ticks(keys, seed, S, dim, engine)
             active = _stack_active(
                 [played[i] for i in batch], S)
-            state, _p = eng.observe_many(state, xs, ys, taus,
-                                         active=active)
+            for si, eng in enumerate(engs):
+                lo, hi = cuts[si], cuts[si + 1]
+                states[si], _p = eng.observe_many(
+                    states[si], xs[:, lo:hi], ys[:, lo:hi],
+                    taus[:, lo:hi], active=active[:, lo:hi])
             ticks_total += len(keys)
             steps_total += int(active.sum())
         else:
-            _read(eng, state, engine, seed, recs[0]["seq"], dim, eps)
+            for si, eng in enumerate(engs):
+                _read(eng, states[si], engine, seed, recs[0]["seq"], dim,
+                      eps)
         done = time.perf_counter() - t0
         service = time.perf_counter() - d0
 
@@ -229,6 +261,23 @@ def replay(records: Iterable[dict[str, Any]], *,
                     slo_total += 1
         completed += len(batch)
     wall = time.perf_counter() - t0
+
+    # ---- per-shard accounting + registry merge -----------------------------
+    per_shard = []
+    for si, eng in enumerate(engs):
+        tot = eng.telemetry.ticks.drain() if eng.telemetry else {}
+        ticks_si = tot.get("ticks", 0)
+        per_shard.append({
+            "shard": si,
+            "tenants": cuts[si + 1] - cuts[si],
+            "session_steps": ticks_si,
+            "occupancy_mean": (tot.get("occupancy_sum", 0) / ticks_si
+                               if ticks_si else math.nan),
+            "occupancy_max": tot.get("occupancy_max", 0),
+        })
+    if shards > 1:
+        for sm in shard_metrics:
+            metrics.merge(sm)
 
     # ---- report ------------------------------------------------------------
     engine_label = ("regression" if engine == "regression"
@@ -270,8 +319,19 @@ def replay(records: Iterable[dict[str, Any]], *,
         "slo_violation_frac": viol_frac,
         "queue_depth_max": float(qhist.max) if qhist.count else 0.0,
         "per_op": per_op,
+        "shards": shards,
+        "per_shard": per_shard,
     }
-    return ReplayResult(report, state, eng, metrics)
+    if shards == 1:
+        state, eng_out = states[0], engs[0]
+    else:
+        import jax as _jax
+        import jax.numpy as _jnp
+
+        state = _jax.tree_util.tree_map(
+            lambda *ls: _jnp.concatenate(ls, axis=0), *states)
+        eng_out = engs
+    return ReplayResult(report, state, eng_out, metrics)
 
 
 def _engine_op(trace_op: str, engine: str) -> str:

@@ -340,3 +340,58 @@ def test_serve_replay_cli_regression_from_file(tmp_path, capsys):
                      "--k", "3", "--speedup", "500"])
     assert rc == 0
     assert "-> regression engine" in capsys.readouterr().out
+
+
+# --------------------------------------------------------- sharded replay
+
+
+def test_replay_sharded_state_bit_identical(bursty_trace,
+                                            bursty_replayed):
+    """Partitioning tenants across per-shard engines must not change
+    the final state: vmap lane independence makes each tenant's stream
+    batch-width-invariant."""
+    sharded = replay(bursty_trace, **ENG, seed=0, shards=2)
+    assert _leaves_equal(bursty_replayed.state, sharded.state)
+    rep = sharded.report
+    assert rep["shards"] == 2
+    assert rep["session_steps"] == bursty_replayed.report["session_steps"]
+    assert rep["ops_replayed"] == bursty_replayed.report["ops_replayed"]
+
+
+def test_replay_sharded_per_shard_report(bursty_trace):
+    rep = replay(bursty_trace, **ENG, seed=0, shards=3).report
+    per = rep["per_shard"]
+    assert [s["shard"] for s in per] == [0, 1, 2]
+    assert sum(s["tenants"] for s in per) == rep["tenants"]
+    assert all(s["tenants"] >= 1 for s in per)
+    assert sum(s["session_steps"] for s in per) == rep["session_steps"]
+    for s in per:
+        assert s["occupancy_max"] <= GEO["capacity"]
+
+
+def test_replay_sharded_metrics_merge_matches_unsharded(bursty_trace):
+    m1, m2 = MetricsRegistry(), MetricsRegistry()
+    replay(bursty_trace, **ENG, seed=0, metrics=m1)
+    replay(bursty_trace, **ENG, seed=0, metrics=m2, shards=2)
+    # counters aggregate across shards to the unsharded totals
+    for op in ("observe", "predict"):
+        assert m2.counter("replay_ops_total", op=op).value == \
+            m1.counter("replay_ops_total", op=op).value
+    assert m2.counter("engine_ticks_total",
+                      engine="classification").value == \
+        m1.counter("engine_ticks_total", engine="classification").value
+
+
+def test_replay_sharded_regression(bursty_trace):
+    recs = loadgen.generate("bursty", ops=48, tenants=4, capacity=16,
+                            engine="regression", seed=5, predict_every=8)
+    ref = replay(recs, engine="regression", **ENG, seed=0)
+    sh = replay(recs, engine="regression", **ENG, seed=0, shards=2)
+    assert _leaves_equal(ref.state, sh.state)
+
+
+def test_replay_rejects_bad_shards(bursty_trace):
+    with pytest.raises(ValueError, match="shards"):
+        replay(bursty_trace, **ENG, shards=0)
+    with pytest.raises(ValueError, match="shards"):
+        replay(bursty_trace, **ENG, shards=99)  # > tenants

@@ -473,3 +473,99 @@ def test_serve_registry_e2e(tmp_path):
     d = json.load(open(mout))
     names = {m["name"] for m in d["metrics"]}
     assert "validity_coverage_mean" in names
+
+
+# ----------------------------------------------------- registry merging
+
+
+def test_counter_and_histogram_merge():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("ops_total", op="observe").inc(3)
+    b.counter("ops_total", op="observe").inc(4)
+    a.counter("ops_total", op="observe").merge(
+        b.counter("ops_total", op="observe"))
+    assert a.counter("ops_total", op="observe").value == 7
+
+    ha, hb = Histogram("h", (), bounds=(1.0, 2.0)), \
+        Histogram("h", (), bounds=(1.0, 2.0))
+    for v in (0.5, 1.5):
+        ha.observe(v)
+    for v in (1.5, 5.0):
+        hb.observe(v)
+    ha.merge(hb)
+    assert ha.count == 4 and ha.counts == [1, 2, 1]
+    assert ha.min == 0.5 and ha.max == 5.0 and ha.sum == 8.5
+
+
+def test_histogram_merge_mismatched_bounds_raises():
+    ha = Histogram("h", (), bounds=(1.0, 2.0))
+    hb = Histogram("h", (), bounds=(1.0, 4.0, 8.0))
+    with pytest.raises(ValueError, match="mismatched bucket"):
+        ha.merge(hb)
+
+
+def test_gauge_merge_policies():
+    from repro.telemetry.metrics import Gauge
+
+    def pair(x, y):
+        ga, gb = Gauge("g", ()), Gauge("g", ())
+        ga.set(x)
+        gb.set(y)
+        return ga, gb
+
+    for policy, want in (("max", 5.0), ("min", 2.0), ("sum", 7.0),
+                         ("last", 2.0)):
+        ga, gb = pair(5.0, 2.0)
+        ga.merge(gb, policy=policy)
+        assert ga.value == want, policy
+    # NaN (unset) never clobbers a set value, in either direction
+    ga, gb = Gauge("g", ()), Gauge("g", ())
+    gb.set(3.0)
+    ga.merge(gb)
+    assert ga.value == 3.0
+    gb.merge(Gauge("g", ()), policy="last")
+    assert gb.value == 3.0
+    with pytest.raises(ValueError, match="policy"):
+        ga.merge(gb, policy="median")
+
+
+def _populated_registry(seed: int) -> MetricsRegistry:
+    r = MetricsRegistry()
+    r.counter("ticks_total", engine="c").inc(10 + seed)
+    r.gauge("occupancy_max", engine="c").set(4.0 * (seed + 1))
+    h = r.histogram("wall_s", op="observe")
+    for v in (1e-4 * (seed + 1), 2e-3):
+        h.observe(v)
+    # a series only this shard owns
+    r.counter(f"only_{seed}_total").inc(seed + 1)
+    return r
+
+
+def test_registry_merge_identity_and_commutativity():
+    # identity: merging an empty registry changes nothing
+    a = _populated_registry(0)
+    before = a.to_text()
+    a.merge(MetricsRegistry())
+    assert a.to_text() == before
+    # ... and merging INTO an empty registry copies everything
+    e = MetricsRegistry()
+    e.merge(_populated_registry(0))
+    assert e.to_text() == before
+
+    # commutativity (sum/max/bucket-add are all symmetric)
+    ab = _populated_registry(0).merge(_populated_registry(1))
+    ba = _populated_registry(1).merge(_populated_registry(0))
+    assert ab.to_text() == ba.to_text()
+    assert ab.counter("ticks_total", engine="c").value == 21
+    assert ab.gauge("occupancy_max", engine="c").value == 8.0
+    assert ab.histogram("wall_s", op="observe").count == 4
+    assert ab.counter("only_0_total").value == 1
+    assert ab.counter("only_1_total").value == 2
+
+
+def test_registry_merge_gauge_policy_forwarded():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.gauge("occ").set(3.0)
+    b.gauge("occ").set(2.0)
+    a.merge(b, gauge_policy="sum")
+    assert a.gauge("occ").value == 5.0
