@@ -53,6 +53,50 @@ def _fleet_rows(quick: bool) -> list[str]:
     return rows
 
 
+def _audit_rows(quick: bool) -> list[str]:
+    """Run the static invariant audit in a child process, render rows.
+
+    Subprocessed for the same reason as the fleet bench: the sharded
+    targets need XLA_FLAGS virtual devices before jax's first import.
+    A failing audit raises, so perf runs cannot record bench rows
+    against a tree that violates the compiled-artifact invariants."""
+    import json
+    import os
+    import subprocess
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        out = os.path.join(td, "audit.json")
+        cmd = [sys.executable, "-m", "repro.analysis.audit", "--out", out]
+        if quick:
+            cmd.append("--quick")
+        r = subprocess.run(cmd, capture_output=True, text=True)
+        print(r.stdout, end="", file=sys.stderr)  # keep the CSV clean
+        if r.returncode and not os.path.exists(out):
+            raise RuntimeError(f"audit crashed: {r.stderr[-500:]}")
+        with open(out) as f:
+            rep = json.load(f)
+    s = rep["summary"]
+    if s["fail"]:
+        bad = [r for r in rep["checks"] if r["status"] == "fail"]
+        raise RuntimeError(
+            f"{s['fail']} audit check(s) failed, first: "
+            f"{bad[0]['check']} @ {bad[0]['target']}")
+    rows = [row("audit/summary",
+                f"targets={len(rep['targets'])},shards<="
+                f"{rep['matrix']['max_shards']}",
+                rep["elapsed_s"],
+                f"pass={s['pass']} fail={s['fail']} "
+                f"waived={s['waived']} skipped={s['skipped']} "
+                f"trip_fallbacks={s['trip_fallbacks']}")]
+    for r in rep["checks"]:
+        if r["status"] == "fail":
+            rows.append(row(f"audit/{r['check']}", r["target"], 0.0,
+                            "FAIL " + (r["violations"][0].get("line", "")
+                                       if r["violations"] else "")))
+    return rows
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -142,6 +186,9 @@ def main(argv=None) -> int:
         # module imported jax lines ago.
         "fleet": lambda: _fleet_rows(args.quick),
         "roofline": lambda: roofline.run(mesh_filter=None),
+        # static invariant audit alongside the perf rows (subprocessed
+        # like fleet; raises — and so records ERROR — on any violation)
+        "audit": lambda: _audit_rows(args.quick),
     }
     only = set(args.only.split(",")) if args.only else set(suites)
 

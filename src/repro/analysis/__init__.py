@@ -1,1 +1,11 @@
-"""Compiled-artifact analysis: HLO collective census + roofline terms."""
+"""Compiled-artifact analysis: HLO census, roofline terms, static audit.
+
+Submodules (all importable without jax except where noted):
+
+* ``hlo`` — optimized-HLO text parser: collective census, dense
+  materializations, input/output aliasing, big-copy detection.
+* ``flops`` — jaxpr flop counting / roofline terms (imports jax).
+* ``lint`` — AST source-invariant lint (pure stdlib, jax-free).
+* ``audit`` — the invariant auditor CLI over the engine matrix
+  (``python -m repro.analysis.audit``; imports jax lazily).
+"""

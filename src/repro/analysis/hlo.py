@@ -47,7 +47,12 @@ _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(")
 _CALL_ATTR_RE = re.compile(r"(?:calls|body|condition|to_apply)=(%[\w.\-]+)")
 _OPERAND_RE = re.compile(r"\((%[\w.\-]+(?:,\s*%[\w.\-]+)*)?\)")
-_PARAM_SIG_RE = re.compile(r"(\w[\w.\-]*):\s*((?:\([^)]*\))|(?:[^,)]+))")
+# a param type is a paren tuple, an array type (whose dims contain
+# commas — `f32[8,8]{1,0}` must not be cut at the first comma), or a
+# bare scalar token
+_PARAM_SIG_RE = re.compile(
+    r"(\w[\w.\-]*):\s*"
+    r"((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?)|(?:[^,)]+))")
 
 
 def _bytes_of_type(type_str: str) -> int:
@@ -143,6 +148,12 @@ def _entry_name(comps: dict, hlo_text: str) -> str:
 
 
 def _trip_count(comps: dict, cond_name: str) -> int:
+    """Max-int-constant HEURISTIC trip count — the fallback when a while
+    op carries no ``known_trip_count`` metadata. It misreads loop bounds
+    when the condition computation holds unrelated large constants, so
+    ``computation_multiplicities`` prefers the metadata everywhere and
+    counts every fallback in ``trip_fallbacks`` (surfaced by the audit
+    report as a parser-confidence warning)."""
     cond = comps.get(cond_name)
     if cond is None:
         return 1
@@ -155,11 +166,17 @@ def _trip_count(comps: dict, cond_name: str) -> int:
 
 
 def computation_multiplicities(hlo_text: str) -> dict:
-    """{computation_name: times executed per step} via while nesting."""
+    """{computation_name: times executed per step} via while nesting.
+
+    Returns ``{"comps", "mult", "entry", "trip_fallbacks"}`` —
+    ``trip_fallbacks`` counts while ops whose trip count came from the
+    max-int-constant heuristic instead of ``known_trip_count`` metadata
+    (0 means every multiplicity is exact)."""
     comps = parse_module(hlo_text)
     entry = _entry_name(comps, hlo_text)
     mult: dict = defaultdict(float)
     seen_stack = []
+    fallbacks = [0]
 
     def visit(name: str, m: float):
         if name not in comps or name in seen_stack:
@@ -168,13 +185,16 @@ def computation_multiplicities(hlo_text: str) -> dict:
         seen_stack.append(name)
         comp = comps[name]
         for body, cond, trip in comp.whiles:
-            n = trip if trip is not None else _trip_count(comps, cond)
-            visit(body, m * n)
-            visit(cond, m * (n + 1))
+            if trip is None:
+                fallbacks[0] += 1
+                trip = _trip_count(comps, cond)
+            visit(body, m * trip)
+            visit(cond, m * (trip + 1))
         seen_stack.pop()
 
     visit(entry, 1.0)
-    return {"comps": comps, "mult": dict(mult), "entry": entry}
+    return {"comps": comps, "mult": dict(mult), "entry": entry,
+            "trip_fallbacks": fallbacks[0]}
 
 
 def collective_bytes(hlo_text: str) -> dict:
@@ -319,6 +339,12 @@ def dense_materializations(hlo_text: str, min_bytes: int) -> list:
         if cname in fusion_called:
             continue  # fusion internals live in registers/VMEM
         comp = comps[cname]
+        # name -> consuming ops, built once per computation (the former
+        # per-candidate rescan made this O(ops^2) on engine modules)
+        consumers_of: dict = defaultdict(list)
+        for o in comp.ops:
+            for ref in o.operands:
+                consumers_of[ref].append(o)
 
         def reduce_rooted(op):
             if op.kind in ("reduce", "reduce-window"):
@@ -344,12 +370,68 @@ def dense_materializations(hlo_text: str, min_bytes: int) -> list:
                         o.kind == "dynamic-update-slice"
                         for o in body.ops):
                     continue  # DUS-rooted fusion: aliased in place
-            consumers = [o for o in comp.ops if op.name in o.operands]
+            consumers = consumers_of.get(op.name, [])
             if consumers and all(reduce_rooted(o) for o in consumers):
                 continue  # reduce staging: collapsed to O(cap) in place
             out.append({"computation": cname, "mult": float(m),
                         "kind": op.kind, "name": op.name,
-                        "bytes": op.result_bytes})
+                        "bytes": op.result_bytes, "line": op.line.strip()})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# compiled-module invariants (consumed by repro.analysis.audit)
+# ---------------------------------------------------------------------------
+
+# one level of brace nesting: entries look like `{0}: (0, {}, may-alias)`
+_ALIAS_ATTR_RE = re.compile(
+    r"input_output_alias=\{((?:[^{}]|\{[^{}]*\})*)\}")
+_ALIAS_ENTRY_RE = re.compile(r"\{([\d,\s]*)\}:\s*\((\d+)")
+
+
+def input_output_aliases(hlo_text: str) -> dict:
+    """Donation aliasing from the HloModule header.
+
+    Returns ``{output_index_path: param_number}`` where the key is the
+    (possibly empty) tuple index of the aliased output in the entry
+    result — e.g. ``{(0,): 0, (1,): 1}`` for a jit whose first two
+    outputs alias (reuse the buffers of) entry parameters 0 and 1.
+    Empty dict when the module declares no aliasing (nothing donated,
+    or every donation was dropped — the donation-leak signal)."""
+    m = _ALIAS_ATTR_RE.search(hlo_text)
+    if not m:
+        return {}
+    out = {}
+    for idx, param in _ALIAS_ENTRY_RE.findall(m.group(1)):
+        key = tuple(int(x) for x in idx.replace(",", " ").split())
+        out[key] = int(param)
+    return out
+
+
+def big_copies(hlo_text: str, min_bytes: int,
+               min_mult: float = 0.0) -> list:
+    """``copy``/``copy-start`` ops writing >= ``min_bytes``, with their
+    while-trip multiplicity and source line.
+
+    A donated buffer that really updates in place never shows a
+    full-size copy of itself; XLA reintroducing one (e.g. a scheduling
+    change that makes the in-place write clobber a pending read) is the
+    regression class PR 5's marker eliminated — this is its detector.
+    """
+    info = computation_multiplicities(hlo_text)
+    comps, mult = info["comps"], info["mult"]
+    out = []
+    for cname, m in mult.items():
+        if m < min_mult:
+            continue
+        for op in comps[cname].ops:
+            if op.kind not in ("copy", "copy-start"):
+                continue
+            if op.result_bytes < min_bytes:
+                continue
+            out.append({"computation": cname, "mult": float(m),
+                        "kind": op.kind, "name": op.name,
+                        "bytes": op.result_bytes, "line": op.line.strip()})
     return out
 
 
@@ -410,5 +492,6 @@ def model_flops_per_step(n_active_params: int, tokens_per_step: int,
 
 __all__ = ["collective_bytes", "hbm_bytes", "count_ops",
            "computation_multiplicities", "dense_materializations",
+           "input_output_aliases", "big_copies",
            "roofline_terms", "model_flops_per_step", "PEAK_FLOPS_BF16",
            "HBM_BW", "ICI_BW"]

@@ -1,0 +1,328 @@
+"""Source-invariant lint: AST checks the compiled-artifact auditor runs
+over ``src/`` without executing (or even importing) any of it.
+
+Each rule encodes a structural invariant the serving stack's tests and
+benches rely on but that HLO-level checks cannot see:
+
+* ``unkeyed-randomness`` — every random draw in ``src/`` must be keyed
+  (``np.random.default_rng(seed)`` / ``jax.random.PRNGKey``): module-
+  level ``np.random.*`` draws and stdlib ``random`` calls are hash-order
+  / process-global state, the exact bug class PR 4 removed from the
+  bootstrap measure.
+* ``host-sync-in-jit`` — functions reachable from a ``jax.jit`` wrapping
+  in the same module must not call ``time.time``/``time.perf_counter``,
+  ``.item()``, ``np.asarray``, or ``.block_until_ready()``: under trace
+  these either fail or silently force a device sync per call.
+* ``tenant-python-loop`` — the engine modules (``serving/engine.py``,
+  ``regression/engine.py``) must never loop Python-side over the tenant
+  axis; the one-dispatch-per-tick contract (PR 1-3) is the whole point.
+* ``donate-inconsistent`` — every ``*_donated`` jit variant
+  (``donate_argnums``) must sit next to a same-named plain variant of
+  the same function (the copy-semantics escape hatch), and any other
+  ``donate_argnums`` in the serving/regression/core layers must be
+  conditioned on a ``donate`` flag (the engines' ``donate=False``
+  contract).
+
+Lines carrying ``# audit: allow`` are exempt (one escape hatch, visible
+in review). Pure stdlib — importable before jax, usable in CI without a
+device.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass
+
+_PRAGMA = "# audit: allow"
+
+#: numpy.random constructors that take (or carry) an explicit seed —
+#: everything else on the module-level RNG is an unkeyed draw
+_KEYED_NP_RANDOM = {"default_rng", "RandomState", "Generator",
+                    "SeedSequence", "PCG64", "Philox", "bit_generator"}
+
+_HOST_SYNC_ATTRS = {"item", "block_until_ready"}
+_TIME_FNS = {"time", "perf_counter", "monotonic", "process_time"}
+
+#: modules whose For/While loops must not range over the tenant axis
+_ENGINE_MODULES = (os.path.join("serving", "engine.py"),
+                   os.path.join("regression", "engine.py"))
+
+#: layers where donate_argnums must follow the _donated / flag contract
+_DONATE_SCOPED = (os.path.join("repro", "serving"),
+                  os.path.join("repro", "regression"),
+                  os.path.join("repro", "core"))
+
+
+@dataclass
+class Violation:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def as_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message}
+
+
+def _allowed(src_lines: list, lineno: int) -> bool:
+    if 1 <= lineno <= len(src_lines):
+        return _PRAGMA in src_lines[lineno - 1]
+    return False
+
+
+def _attr_chain(node: ast.AST) -> list:
+    """['np', 'random', 'default_rng'] for np.random.default_rng."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return parts[::-1]
+
+
+def _numpy_aliases(tree: ast.Module) -> set:
+    """Names this module binds to the numpy package (np, numpy, ...)."""
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "numpy":
+                    out.add(a.asname or "numpy")
+    return out
+
+
+def _stdlib_random_aliases(tree: ast.Module) -> set:
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "random":
+                    out.add(a.asname or "random")
+    return out
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """jax.jit / jit, or functools.partial(jax.jit, ...)."""
+    chain = _attr_chain(node)
+    if chain and chain[-1] == "jit":
+        return True
+    if isinstance(node, ast.Call):
+        c = _attr_chain(node.func)
+        if c and c[-1] == "partial" and node.args:
+            return _is_jit_expr(node.args[0])
+    return False
+
+
+def _jit_call_kwargs(node: ast.Call) -> dict:
+    """kwargs across a partial(jax.jit, ...)(fn) or jax.jit(fn, ...)."""
+    kws = {k.arg: k.value for k in node.keywords if k.arg}
+    if isinstance(node.func, ast.Call):  # the partial(...) call itself
+        kws.update({k.arg: k.value
+                    for k in node.func.keywords if k.arg})
+    return kws
+
+
+def _jit_wrapped_names(tree: ast.Module) -> set:
+    """Module-level function names handed to a jit wrapping."""
+    roots = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if _is_jit_expr(dec):
+                    roots.add(node.name)
+        if isinstance(node, ast.Call) and _is_jit_expr(node.func):
+            for a in node.args:
+                if isinstance(a, ast.Name):
+                    roots.add(a.id)
+                # jax.jit(functools.partial(fn, ...)) / partial forms
+                if isinstance(a, ast.Call) and a.args and \
+                        isinstance(a.args[0], ast.Name):
+                    roots.add(a.args[0].id)
+    return roots
+
+
+def _reachable_from(roots: set, funcs: dict) -> set:
+    """Transitive closure over same-module Name calls."""
+    seen = set()
+    todo = [r for r in roots if r in funcs]
+    while todo:
+        name = todo.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        for node in ast.walk(funcs[name]):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id in funcs:
+                todo.append(node.func.id)
+    return seen
+
+
+def _lint_randomness(path, tree, lines, out):
+    np_names = _numpy_aliases(tree)
+    rnd_names = _stdlib_random_aliases(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if len(chain) >= 3 and chain[0] in np_names \
+                and chain[1] == "random" \
+                and chain[2] not in _KEYED_NP_RANDOM:
+            if not _allowed(lines, node.lineno):
+                out.append(Violation(
+                    "unkeyed-randomness", path, node.lineno,
+                    f"module-level numpy RNG draw "
+                    f"{'.'.join(chain)}(); key it via "
+                    f"np.random.default_rng(seed)"))
+        if len(chain) == 2 and chain[0] in rnd_names:
+            if not _allowed(lines, node.lineno):
+                out.append(Violation(
+                    "unkeyed-randomness", path, node.lineno,
+                    f"stdlib random call {'.'.join(chain)}() uses "
+                    f"process-global state; use a keyed generator"))
+
+
+def _lint_host_sync(path, tree, lines, out):
+    np_names = _numpy_aliases(tree)
+    funcs = {n.name: n for n in ast.walk(tree)
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    jitted = _reachable_from(_jit_wrapped_names(tree), funcs)
+    for fname in sorted(jitted):
+        for node in ast.walk(funcs[fname]):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            bad = None
+            if len(chain) == 2 and chain[0] == "time" \
+                    and chain[1] in _TIME_FNS:
+                bad = f"wall-clock read {'.'.join(chain)}()"
+            elif chain and chain[-1] in _HOST_SYNC_ATTRS:
+                bad = f".{chain[-1]}() host sync"
+            elif len(chain) == 2 and chain[0] in np_names \
+                    and chain[1] == "asarray":
+                bad = "np.asarray (device->host transfer)"
+            if bad and not _allowed(lines, node.lineno):
+                out.append(Violation(
+                    "host-sync-in-jit", path, node.lineno,
+                    f"{bad} inside jit-reachable helper {fname}()"))
+
+
+def _lint_tenant_loops(path, tree, lines, out):
+    if not path.replace("\\", "/").endswith(
+            tuple(p.replace(os.sep, "/") for p in _ENGINE_MODULES)):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.For, ast.While)):
+            continue
+        probe = node.iter if isinstance(node, ast.For) else node.test
+        names = {n.id for n in ast.walk(probe) if isinstance(n, ast.Name)}
+        attrs = {n.attr for n in ast.walk(probe)
+                 if isinstance(n, ast.Attribute)}
+        if ("n_sessions" in names | attrs or "sessions" in names) \
+                and not _allowed(lines, node.lineno):
+            out.append(Violation(
+                "tenant-python-loop", path, node.lineno,
+                "Python loop over the tenant axis in an engine module; "
+                "ticks must stay one vmapped/shard_map'd dispatch"))
+
+
+def _lint_donate(path, tree, lines, out):
+    norm = path.replace("\\", "/")
+    if not any(s.replace(os.sep, "/") in norm for s in _DONATE_SCOPED):
+        return
+    # module-level jit assignments: name -> (wrapped fn name, kwargs)
+    assigns = {}
+    for node in tree.body:
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)
+                and _is_jit_expr(node.value.func)):
+            continue
+        inner = None
+        if node.value.args and isinstance(node.value.args[0], ast.Name):
+            inner = node.value.args[0].id
+        assigns[node.targets[0].id] = (
+            inner, _jit_call_kwargs(node.value), node.lineno)
+    for name, (inner, kws, lineno) in assigns.items():
+        if "donate_argnums" not in kws:
+            continue
+        if not name.endswith("_donated"):
+            if _allowed(lines, lineno):
+                continue
+            out.append(Violation(
+                "donate-inconsistent", path, lineno,
+                f"{name} donates its input without the _donated naming "
+                f"contract (callers can't see the copy-semantics "
+                f"change)"))
+            continue
+        base = name[:-len("_donated")]
+        plain = assigns.get(base)
+        if plain is None or plain[0] != inner \
+                or "donate_argnums" in plain[1]:
+            if not _allowed(lines, lineno):
+                out.append(Violation(
+                    "donate-inconsistent", path, lineno,
+                    f"{name} has no plain copy-semantics twin "
+                    f"{base} wrapping the same function"))
+    # donate_argnums anywhere else in scope must be flag-conditioned
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and _is_jit_expr(node.func)):
+            continue
+        kws = _jit_call_kwargs(node)
+        if "donate_argnums" not in kws:
+            continue
+        expr = kws["donate_argnums"]
+        at_module_level = any(
+            isinstance(n, ast.Assign) and n.value is node
+            for n in tree.body)
+        if at_module_level:
+            continue  # the _donated contract above covers these
+        names = {x.id for x in ast.walk(expr) if isinstance(x, ast.Name)}
+        attrs = {x.attr for x in ast.walk(expr)
+                 if isinstance(x, ast.Attribute)}
+        if not any("donate" in s for s in names | attrs) \
+                and not _allowed(lines, node.lineno):
+            out.append(Violation(
+                "donate-inconsistent", path, node.lineno,
+                "donate_argnums not conditioned on a donate flag; the "
+                "engines' donate=False contract must stay honest"))
+
+
+_RULES = (_lint_randomness, _lint_host_sync, _lint_tenant_loops,
+          _lint_donate)
+
+RULE_NAMES = ("unkeyed-randomness", "host-sync-in-jit",
+              "tenant-python-loop", "donate-inconsistent")
+
+
+def lint_paths(paths) -> list:
+    """Run every rule over the given .py files; list of Violations."""
+    out: list = []
+    for path in paths:
+        with open(path, encoding="utf-8") as f:
+            src = f.read()
+        try:
+            tree = ast.parse(src, filename=path)
+        except SyntaxError as e:  # surfaced, not swallowed
+            out.append(Violation("parse-error", path, e.lineno or 0,
+                                 str(e)))
+            continue
+        lines = src.splitlines()
+        for rule in _RULES:
+            rule(path, tree, lines, out)
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule))
+
+
+def lint_tree(root: str) -> list:
+    """Lint every .py file under ``root`` (normally ``src/``)."""
+    paths = []
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                paths.append(os.path.join(dirpath, fn))
+    return lint_paths(paths)
+
+
+__all__ = ["Violation", "lint_paths", "lint_tree", "RULE_NAMES"]

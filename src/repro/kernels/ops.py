@@ -71,6 +71,22 @@ def pallas_active(dtype=jnp.float32) -> bool:
     return dtype != jnp.float64 and (_on_tpu() or _interpret())
 
 
+def active_route(dtype=jnp.float32) -> dict:
+    """Snapshot of the kernel dispatch route for reports/audits.
+
+    Pure host-side introspection (no compilation, no device work) —
+    recorded verbatim in the static-audit JSON report so a pass/fail is
+    attributable to the backend that produced the HLO.
+    """
+    return {
+        "backend": jax.default_backend(),
+        "on_tpu": _on_tpu(),
+        "interpret": _interpret(),
+        "pallas_active": pallas_active(dtype),
+        "f64_reference": dtype == jnp.float64,
+    }
+
+
 def interval_sweep(X, a_prime, kth_dist, kth_label, live, X_test, a_test, k):
     """Fused regression-CP critical points (lo, hi); Pallas on TPU."""
     if X.dtype == jnp.float64:

@@ -562,8 +562,20 @@ def main(argv=None) -> int:
     ap.add_argument("--annotate", action="store_true",
                     help="with --trace-out: wrap traced ops in "
                          "jax.profiler.TraceAnnotation scopes")
+    # static invariant audit (repro.analysis.audit)
+    ap.add_argument("--audit", action="store_true",
+                    help="run the compiled-artifact invariant audit over "
+                         "the engine matrix and exit (no serving); "
+                         "nonzero exit on any violation")
+    ap.add_argument("--audit-out", default="audit_report.json",
+                    help="with --audit: JSON report path")
     args = ap.parse_args(argv)
 
+    if args.audit:
+        from repro.analysis import audit as audit_m
+        return audit_m.main(
+            ["--out", args.audit_out, "--no-reexec",
+             "--max-shards", str(max(args.shards, 1))])
     if args.replay:
         if args.measure:
             raise SystemExit("--replay and --measure are exclusive")

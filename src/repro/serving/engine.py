@@ -265,6 +265,25 @@ class ServingEngine:
         self.telemetry.ticks.fold(stats)
         return state, p
 
+    def lower_tick(self, ticks: int = 4):
+        """Lower (but do NOT execute) a ``ticks``-long observe_many chunk.
+
+        Returns the ``jax.stages.Lowered`` for the engine's compiled
+        step on a zeros example batch — the artifact the static auditor
+        (``repro.analysis.audit``) inspects for donation aliasing,
+        collective-freedom and dense-materialization budgets. Tracing
+        only: engine state and jit caches are untouched beyond the
+        cache entry the first real tick would create anyway.
+        """
+        state = self.init_state()
+        S, T = self.n_sessions, ticks
+        xs = jnp.zeros((T, S, self.dim), self.dtype)
+        ys = jnp.zeros((T, S), jnp.int32)
+        taus = jnp.zeros((T, S), self.dtype)
+        active = jnp.ones((T, S), dtype=bool)
+        return self._step_many.lower(state, xs, ys, taus,
+                                     self._windows(state), active)
+
     def reset_occupancy(self) -> None:
         """Forget the host-side occupancy bound (grow mode) and the
         window-invariant check; the next ``observe`` re-syncs/re-checks

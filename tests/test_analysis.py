@@ -1,0 +1,246 @@
+"""Unit tests for the analysis layer: the HLO text parser
+(``repro.analysis.hlo``) and the jaxpr flop counter
+(``repro.analysis.flops``) on hand-computable fixtures.
+
+Until now these were only exercised indirectly (through the ring-layout
+and substrate tests); the fixtures here pin the parser behaviours the
+static auditor (``repro.analysis.audit``) depends on: tuple result
+types, fusion ``calls=`` indirection, while nesting with and without
+``known_trip_count`` metadata, dynamic-update-slice aliasing, the
+``input_output_alias`` module header, and big-copy detection.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import flops as flops_m
+from repro.analysis import hlo as hlo_m
+
+# a while loop (trip count 5 in metadata AND as the cond bound constant)
+# whose body all-reduces an f32[8,8]; tuple types + to_apply throughout
+_WHILE_FIX = """\
+HloModule fix_while, input_output_alias={{ {{0}}: (1, {{}}, may-alias) }}
+
+%sum (a: f32[], b: f32[]) -> f32[] {{
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(f32[] %a, f32[] %b)
+}}
+
+%body (arg.1: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {{
+  %arg.1 = (s32[], f32[8,8]) parameter(0)
+  %gte.0 = s32[] get-tuple-element((s32[], f32[8,8]) %arg.1), index=0
+  %one = s32[] constant(1)
+  %next = s32[] add(s32[] %gte.0, s32[] %one)
+  %gte.1 = f32[8,8]{{1,0}} get-tuple-element((s32[], f32[8,8]) %arg.1), index=1
+  %ar = f32[8,8]{{1,0}} all-reduce(f32[8,8]{{1,0}} %gte.1), replica_groups={{}}, to_apply=%sum
+  ROOT %tup = (s32[], f32[8,8]) tuple(s32[] %next, f32[8,8]{{1,0}} %ar)
+}}
+
+%cond (arg.2: (s32[], f32[8,8])) -> pred[] {{
+  %arg.2 = (s32[], f32[8,8]) parameter(0)
+  %g = s32[] get-tuple-element((s32[], f32[8,8]) %arg.2), index=0
+  %bound = s32[] constant(5)
+  ROOT %lt = pred[] compare(s32[] %g, s32[] %bound), direction=LT
+}}
+
+ENTRY %main (p0: s32[], p1: f32[8,8]) -> (s32[], f32[8,8]) {{
+  %p0 = s32[] parameter(0)
+  %p1 = f32[8,8]{{1,0}} parameter(1)
+  %init = (s32[], f32[8,8]) tuple(s32[] %p0, f32[8,8]{{1,0}} %p1)
+  ROOT %w = (s32[], f32[8,8]) while((s32[], f32[8,8]) %init), condition=%cond, body=%body{trip}
+}}
+"""
+_WITH_TRIP = _WHILE_FIX.format(
+    trip=', backend_config={"known_trip_count":{"n":"5"}}')
+_NO_TRIP = _WHILE_FIX.format(trip="")
+
+# a DUS-rooted fusion updating one row of an f32[16,16] in place
+_DUS_FIX = """\
+HloModule fix_dus
+
+%fused (fp0: f32[16,16], fp1: f32[1,16], fp2: s32[], fp3: s32[]) -> f32[16,16] {
+  %fp0 = f32[16,16]{1,0} parameter(0)
+  %fp1 = f32[1,16]{1,0} parameter(1)
+  %fp2 = s32[] parameter(2)
+  %fp3 = s32[] parameter(3)
+  ROOT %dus = f32[16,16]{1,0} dynamic-update-slice(f32[16,16]{1,0} %fp0, f32[1,16]{1,0} %fp1, s32[] %fp2, s32[] %fp3)
+}
+
+ENTRY %main (p0: f32[16,16], p1: f32[1,16], p2: s32[]) -> f32[16,16] {
+  %p0 = f32[16,16]{1,0} parameter(0)
+  %p1 = f32[1,16]{1,0} parameter(1)
+  %p2 = s32[] parameter(2)
+  ROOT %fus = f32[16,16]{1,0} fusion(f32[16,16]{1,0} %p0, f32[1,16]{1,0} %p1, s32[] %p2, s32[] %p2), kind=kLoop, calls=%fused
+}
+"""
+
+_COPY_FIX = """\
+HloModule fix_copy
+
+ENTRY %main (p0: f32[16,16]) -> f32[16,16] {
+  %p0 = f32[16,16]{1,0} parameter(0)
+  ROOT %c = f32[16,16]{1,0} copy(f32[16,16]{1,0} %p0)
+}
+"""
+
+_ELEMWISE_FIX = """\
+HloModule fix_elem
+
+ENTRY %main (p0: f32[4,4], p1: f32[4,4]) -> f32[4,4] {
+  %p0 = f32[4,4]{1,0} parameter(0)
+  %p1 = f32[4,4]{1,0} parameter(1)
+  %m = f32[4,4]{1,0} multiply(f32[4,4]{1,0} %p0, f32[4,4]{1,0} %p1)
+  ROOT %a = f32[4,4]{1,0} add(f32[4,4]{1,0} %m, f32[4,4]{1,0} %p0)
+}
+"""
+
+
+# ---------------------------------------------------------------------------
+# parser round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_parse_module_tuple_types_and_while_nesting():
+    comps = hlo_m.parse_module(_WITH_TRIP)
+    assert set(comps) == {"%sum", "%body", "%cond", "%main"}
+    main = comps["%main"]
+    # tuple-typed while result: s32[] + f32[8,8] = 4 + 256 bytes
+    assert main.defs["%w"] == 4 + 256
+    # ordered signature params with their byte sizes
+    assert main.params == [("%p0", 4), ("%p1", 256)]
+    assert main.whiles == [("%body", "%cond", 5)]
+    # to_apply indirection recorded as a called computation
+    assert "%sum" in comps["%body"].fusion_calls
+    # operand extraction stops at the first attribute assignment
+    (ar,) = [o for o in comps["%body"].ops if o.kind == "all-reduce"]
+    assert ar.operands == ["%gte.1"] and ar.result_bytes == 256
+
+
+def test_multiplicities_prefer_known_trip_count():
+    info = hlo_m.computation_multiplicities(_WITH_TRIP)
+    assert info["entry"] == "%main"
+    assert info["trip_fallbacks"] == 0  # metadata, no heuristic
+    assert info["mult"]["%body"] == 5.0
+    assert info["mult"]["%cond"] == 6.0  # trip + 1 evaluations
+
+
+def test_multiplicities_heuristic_fallback_is_counted():
+    info = hlo_m.computation_multiplicities(_NO_TRIP)
+    assert info["trip_fallbacks"] == 1  # warning surfaced to the audit
+    # the cond's bound constant still recovers the right trip count
+    assert info["mult"]["%body"] == 5.0
+
+
+def test_collective_bytes_and_count_ops_while_weighted():
+    # one f32[8,8] all-reduce per trip: 5 * 256 bytes
+    assert hlo_m.collective_bytes(_WITH_TRIP) == {"all-reduce": 1280.0}
+    counts = hlo_m.count_ops(_WITH_TRIP)
+    assert counts["all-reduce"] == 5.0
+    assert counts["while"] == 1.0
+    assert hlo_m.collective_bytes(_DUS_FIX) == {}
+
+
+def test_hbm_bytes_elementwise_fixture():
+    # multiply: 3 x 64B; add: 3 x 64B; parameters are free
+    assert hlo_m.hbm_bytes(_ELEMWISE_FIX) == 384.0
+
+
+def test_hbm_bytes_dus_fusion_writes_only_the_row():
+    # DUS-rooted fusion: write = the (1, 16) update row (64B), reads =
+    # aliased big param (0) + row (64B) + two s32 indices (4B each)
+    assert hlo_m.hbm_bytes(_DUS_FIX) == 64.0 + 64.0 + 4.0 + 4.0
+
+
+def test_dense_materializations_skip_dus_report_copies():
+    # the in-place DUS fusion is NOT a dense materialization...
+    assert hlo_m.dense_materializations(_DUS_FIX, 16 * 16 * 4) == []
+    # ...but a full-size copy is, and carries its source line
+    (d,) = hlo_m.dense_materializations(_COPY_FIX, 16 * 16 * 4)
+    assert d["kind"] == "copy" and d["bytes"] == 1024
+    assert d["line"].startswith("ROOT %c")
+
+
+def test_input_output_aliases_header():
+    assert hlo_m.input_output_aliases(_WITH_TRIP) == {(0,): 1}
+    assert hlo_m.input_output_aliases(_DUS_FIX) == {}
+    multi = ("HloModule m, input_output_alias={ {0}: (0, {}, may-alias),"
+             " {2}: (3, {}, must-alias) }\n")
+    assert hlo_m.input_output_aliases(multi) == {(0,): 0, (2,): 3}
+
+
+def test_big_copies_multiplicity_filter():
+    (c,) = hlo_m.big_copies(_COPY_FIX, 1024)
+    assert c["kind"] == "copy" and c["mult"] == 1.0
+    # entry-level one-time copies are below a per-tick min_mult gate
+    assert hlo_m.big_copies(_COPY_FIX, 1024, min_mult=1.5) == []
+    assert hlo_m.big_copies(_COPY_FIX, 2048) == []
+
+
+# ---------------------------------------------------------------------------
+# real lowerings still parse (guards against HLO text drift)
+# ---------------------------------------------------------------------------
+
+
+def test_parser_on_real_scan_lowering():
+    def f(c, xs):
+        def step(c, x):
+            c = c + jnp.dot(x, x)
+            return c, c.sum()
+        return jax.lax.scan(step, c, xs)
+
+    text = jax.jit(f).lower(
+        jnp.zeros((4, 4)), jnp.zeros((7, 4, 4))).compile().as_text()
+    info = hlo_m.computation_multiplicities(text)
+    bodies = [m for name, m in info["mult"].items()
+              if name != info["entry"] and m >= 7.0]
+    assert bodies, info["mult"]  # the scan body runs 7x
+    assert hlo_m.collective_bytes(text) == {}
+    assert hlo_m.hbm_bytes(text) > 0
+
+
+def test_donated_jit_aliases_in_real_lowering():
+    @jax.jit
+    def g(a, b):
+        return a * 2.0 + b, b
+
+    donated = jax.jit(lambda a, b: (a * 2.0 + b, b), donate_argnums=(0,))
+    plain_text = g.lower(
+        jnp.zeros((32, 32)), jnp.zeros((32, 32))).compile().as_text()
+    don_text = donated.lower(
+        jnp.zeros((32, 32)), jnp.zeros((32, 32))).compile().as_text()
+    assert 0 in hlo_m.input_output_aliases(don_text).values()
+    assert 0 not in hlo_m.input_output_aliases(plain_text).values()
+
+
+# ---------------------------------------------------------------------------
+# flop counter
+# ---------------------------------------------------------------------------
+
+
+def test_flops_of_known_matmul():
+    a = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    b = jax.ShapeDtypeStruct((16, 4), jnp.float32)
+    out = flops_m.flops_of(jnp.dot, a, b)
+    assert out["flops"] == 2.0 * 8 * 4 * 16  # 2*M*N*K = 1024
+    assert out["transcendental"] == 0.0
+
+
+def test_flops_scan_multiplies_by_length():
+    def f(xs):
+        def step(c, x):
+            return c + x @ x, ()
+        c, _ = jax.lax.scan(step, jnp.zeros((8, 8)), xs)
+        return c
+
+    out = flops_m.flops_of(f, jax.ShapeDtypeStruct((5, 8, 8), jnp.float32))
+    matmul = 2.0 * 8 * 8 * 8
+    add = 8 * 8
+    assert out["flops"] == 5 * (matmul + add)
+
+
+def test_flops_transcendental_term():
+    out = flops_m.flops_of(jnp.exp,
+                           jax.ShapeDtypeStruct((10,), jnp.float32))
+    assert out["transcendental"] == 10.0

@@ -1,0 +1,269 @@
+"""The compiled-artifact invariant auditor (``repro.analysis.audit``).
+
+Four layers:
+
+* the source lint is clean on the shipped tree, and each rule fires on
+  a purpose-built bad fixture (with the ``# audit: allow`` escape);
+* a quick in-process audit run over the single-shard matrix reports
+  zero failures (the CI gate in miniature);
+* deliberately broken invariants are CAUGHT with the offending HLO op
+  named: a dropped donation, a per-tick dense materialization, a
+  smuggled collective, a blown retrace budget;
+* bit-neutrality: auditing an engine (tracing/lowering + checkers)
+  never perturbs its served results — ticks and reads stay
+  leaf-for-leaf identical to an unaudited twin (both engines, both
+  layouts).
+"""
+import os
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import audit as audit_m
+from repro.analysis import lint as lint_m
+from repro.regression.engine import RegressionServingEngine
+from repro.serving.engine import ServingEngine
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+# ---------------------------------------------------------------------------
+# source lint
+# ---------------------------------------------------------------------------
+
+
+def test_lint_clean_on_shipped_tree():
+    vs = lint_m.lint_tree(os.path.join(_SRC, "repro"))
+    assert vs == [], [v.as_dict() for v in vs]
+
+
+def _write(tmp_path, rel, text):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(text))
+    return str(p)
+
+
+def test_lint_unkeyed_randomness(tmp_path):
+    p = _write(tmp_path, "mod.py", """
+        import numpy as np
+        import random
+        a = np.random.rand(3)
+        b = random.random()
+        rng = np.random.default_rng(0)
+        ok = rng.normal(size=3)
+        allowed = np.random.rand(2)  # audit: allow
+    """)
+    vs = lint_m.lint_paths([p])
+    assert [v.line for v in vs] == [4, 5]
+    assert all(v.rule == "unkeyed-randomness" for v in vs)
+
+
+def test_lint_host_sync_in_jit(tmp_path):
+    p = _write(tmp_path, "mod.py", """
+        import time
+        import numpy as np
+        import jax
+
+        def helper(x):
+            time.time()
+            return x.item()
+
+        @jax.jit
+        def step(x):
+            np.asarray(x)
+            return helper(x)
+
+        def host_only(x):  # NOT jit-reachable: no violation
+            time.time()
+            return np.asarray(x)
+    """)
+    vs = lint_m.lint_paths([p])
+    assert {v.rule for v in vs} == {"host-sync-in-jit"}
+    assert [v.line for v in vs] == [7, 8, 12]  # helper is reachable
+
+
+def test_lint_tenant_loop_only_in_engine_modules(tmp_path):
+    body = """
+        def tick(self, n_sessions):
+            for s in range(n_sessions):
+                pass
+    """
+    eng = _write(tmp_path, "serving/engine.py", body)
+    other = _write(tmp_path, "serving/other.py", body)
+    vs = lint_m.lint_paths([eng, other])
+    assert len(vs) == 1 and vs[0].rule == "tenant-python-loop"
+    assert vs[0].path == eng
+
+
+def test_lint_donate_contract(tmp_path):
+    p = _write(tmp_path, "repro/serving/mod.py", """
+        import jax
+
+        def _obs(s, x):
+            return s
+
+        observe = jax.jit(_obs)
+        observe_donated = jax.jit(_obs, donate_argnums=(0,))
+        orphan_donated = jax.jit(_obs, donate_argnums=(0,))
+
+        def build(donate):
+            return jax.jit(_obs,
+                           donate_argnums=(0,) if donate else ())
+
+        def sneaky():
+            return jax.jit(_obs, donate_argnums=(0,))
+    """)
+    vs = lint_m.lint_paths([p])
+    assert all(v.rule == "donate-inconsistent" for v in vs)
+    # orphan (no plain twin) + the unconditioned nested jit
+    assert len(vs) == 2, [v.as_dict() for v in vs]
+
+
+# ---------------------------------------------------------------------------
+# the gate is green on the current tree (single-shard quick matrix; CI
+# runs the full sharded matrix via `python -m repro.analysis.audit`)
+# ---------------------------------------------------------------------------
+
+
+def test_quick_audit_reports_zero_failures():
+    rep = audit_m.run_audit(max_shards=1, quick=True)
+    assert rep["ok"], audit_m.format_summary(rep)
+    assert rep["summary"]["fail"] == 0
+    assert rep["summary"]["pass"] > 0
+    # every engine-matrix multiplicity came from exact trip metadata
+    assert rep["summary"]["trip_fallbacks"] == 0
+    checks = {(r["check"], r["target"]): r["status"]
+              for r in rep["checks"]}
+    assert checks[("source-lint", "src")] == "pass"
+    # the compact-sliding budget is a waiver, not a silent pass
+    waived = [k for k, s in checks.items() if s == "waived"]
+    assert any("sliding-compact" in t for _, t in waived)
+    assert rep["route"]["backend"] == jax.default_backend()
+
+
+# ---------------------------------------------------------------------------
+# deliberate violations are caught, offending op named
+# ---------------------------------------------------------------------------
+
+
+def test_dropped_donation_is_caught():
+    t = audit_m.AuditTarget(name="sab-donate", kind="engine",
+                            family="classification", mode="sliding",
+                            layout="ring", shards=1)
+    art = audit_m.Artifact(t)
+    art._engine = art.build_engine(donate=False)  # the sabotage
+    r = audit_m.CHECKERS["donation-alias"](t, art)
+    assert r["status"] == "fail"
+    assert "donated state leaves" in r["violations"][0]["line"]
+
+
+def test_per_tick_dense_materialization_is_caught():
+    # the compact sliding layout WITHOUT its waiver is exactly the
+    # "shift the ring with a copy" regression
+    t = audit_m.AuditTarget(name="sab-dense", kind="engine",
+                            family="classification", mode="sliding",
+                            layout="compact", shards=1)
+    r = audit_m.CHECKERS["dense-budget"](t, audit_m.Artifact(t))
+    assert r["status"] == "fail"
+    v = r["violations"][0]
+    assert v["mult"] > 1 and v["bytes"] >= t.n_sessions * 32 * 32 * 4
+    assert v["line"]  # the offending HLO op, verbatim
+
+
+_PSUM_FIX = """\
+HloModule sabotage
+
+ENTRY %main (p0: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8]{1,0} parameter(0)
+  ROOT %ar = f32[8,8]{1,0} all-reduce(f32[8,8]{1,0} %p0), replica_groups={}, to_apply=%sum
+}
+"""
+
+
+def test_smuggled_collective_is_caught():
+    vs = audit_m.collective_violations(_PSUM_FIX)
+    assert len(vs) == 1
+    assert vs[0]["kind"] == "all-reduce" and vs[0]["name"] == "%ar"
+    assert "all-reduce" in vs[0]["line"]
+
+
+def test_blown_retrace_budget_is_caught():
+    t = audit_m.AuditTarget(name="sab-retrace", kind="engine",
+                            family="classification", mode="sliding",
+                            layout="ring", shards=1,
+                            retrace_budget={"step": 0, "read": 0})
+    r = audit_m.CHECKERS["retrace"](t, audit_m.Artifact(t))
+    assert r["status"] == "fail"
+    assert {v["kind"] for v in r["violations"]} == {"retrace-budget"}
+
+
+def test_format_summary_names_failures():
+    rep = {"summary": {"pass": 1, "fail": 1, "waived": 0, "skipped": 0,
+                       "trip_fallbacks": 2},
+           "matrix": {"engine_targets": 1, "measure_targets": 0,
+                      "max_shards": 1},
+           "elapsed_s": 0.1,
+           "checks": [{"check": "collective-freedom", "target": "x",
+                       "status": "fail",
+                       "violations": [{"line": "%ar = all-reduce(...)"}]}]}
+    text = audit_m.format_summary(rep)
+    assert "FAIL collective-freedom @ x" in text
+    assert "%ar = all-reduce(...)" in text
+    assert "known_trip_count" in text  # the fallback warning
+
+
+# ---------------------------------------------------------------------------
+# bit-neutrality: auditing never perturbs served results
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["classification", "regression"])
+@pytest.mark.parametrize("layout", ["ring", "compact"])
+def test_audit_is_bit_neutral(family, layout):
+    S, T, cap, dim, k = 3, 6, 16, 4, 3
+    rng = np.random.default_rng(42)
+    xs = jnp.asarray(rng.normal(size=(T, S, dim)), jnp.float32)
+    taus = jnp.asarray(rng.uniform(size=(T, S)), jnp.float32)
+    kw = dict(n_sessions=S, capacity=cap, dim=dim, k=k, window=cap,
+              layout=layout)
+    if family == "classification":
+        ys = jnp.asarray(rng.integers(0, 2, (T, S)), jnp.int32)
+        mk = lambda: ServingEngine(n_labels=2, **kw)
+    else:
+        ys = jnp.asarray(rng.normal(size=(T, S)), jnp.float32)
+        mk = lambda: RegressionServingEngine(**kw)
+    audited, plain = mk(), mk()
+
+    # run the full static battery against the audited engine first
+    t = audit_m.AuditTarget(
+        name="bitneutral", kind="engine", family=family, mode="sliding",
+        layout=layout, shards=1, n_sessions=S, capacity=cap, dim=dim,
+        k=k, window=cap,
+        dense_waiver="compact oracle" if layout == "compact" else "",
+        copy_waiver="compact oracle" if layout == "compact" else "")
+    art = audit_m.Artifact(t)
+    art._engine = audited
+    for name in ("donation-alias", "collective-freedom", "dense-budget"):
+        r = audit_m.CHECKERS[name](t, art)
+        assert r["status"] in ("pass", "waived"), r
+
+    sa, pa = audited.observe_many(audited.init_state(), xs, ys, taus)
+    sb, pb = plain.observe_many(plain.init_state(), xs, ys, taus)
+    np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    for la, lb in zip(jax.tree_util.tree_leaves(sa),
+                      jax.tree_util.tree_leaves(sb)):
+        assert np.array_equal(np.asarray(la), np.asarray(lb),
+                              equal_nan=True)
+    xq = xs[0]
+    if family == "classification":
+        ra, rb = audited.predict(sa, xq), plain.predict(sb, xq)
+    else:
+        ra = audited.intervals(sa, xq, epsilon=0.1)
+        rb = plain.intervals(sb, xq, epsilon=0.1)
+    assert np.array_equal(np.asarray(ra), np.asarray(rb),
+                          equal_nan=True)

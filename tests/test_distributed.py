@@ -201,3 +201,42 @@ def test_sharded_regression_bit_identical():
 
 def test_uneven_tenant_count_pads_cleanly():
     _run_child(_PAD_SCRIPT, "PAD_SHARDED_OK")
+
+
+# --------------------------------------------------------------------------
+# collective-freedom via the auditor: repro.analysis.audit owns the
+# single definition of the zero-collective invariant; this child runs
+# it against sharded ticks AND proves a smuggled psum is caught.
+# --------------------------------------------------------------------------
+
+_AUDIT_SCRIPT = _PRELUDE + textwrap.dedent("""
+    from repro.analysis import audit as audit_m
+    from repro.analysis import hlo as hlo_m
+
+    # every sharded engine tick in the matrix must be collective-free
+    for t in audit_m.engine_matrix(max_shards=8):
+        if t.shards == 1:
+            continue
+        art = audit_m.Artifact(t)
+        r = audit_m.CHECKERS["collective-freedom"](t, art)
+        assert r["status"] == "pass", (t.name, r["violations"])
+        assert sum(r["info"]["collective_bytes"].values()) == 0, t.name
+
+    # sabotage: a psum smuggled into a shard_map'd tick is caught with
+    # the offending HLO op named
+    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    mesh = Mesh(jax.devices(), ("tenants",))
+    bad = jax.jit(shard_map(
+        lambda x: x + jax.lax.psum(x, "tenants"), mesh=mesh,
+        in_specs=P("tenants"), out_specs=P("tenants")))
+    text = bad.lower(jnp.ones((8, 4), jnp.float32)).compile().as_text()
+    vs = audit_m.collective_violations(text)
+    assert vs and "all-reduce" in vs[0]["kind"], vs
+    assert "all-reduce" in vs[0]["line"], vs
+    print("AUDIT_SHARDED_OK")
+""")
+
+
+def test_audit_collective_freedom_sharded():
+    _run_child(_AUDIT_SCRIPT, "AUDIT_SHARDED_OK")

@@ -30,7 +30,6 @@ try:
 except ImportError:  # pragma: no cover - exercised in bare containers
     HAS_HYPOTHESIS = False
 
-from repro.analysis import hlo as hlo_m
 from repro.core import regression as reg
 from repro.data.synthetic import make_classification, make_regression
 from repro.regression import RegressionServingEngine
@@ -420,18 +419,9 @@ def test_arrival_id_wraparound_is_harmless():
 
 
 # ---------------------------------------------------------------------------
-# the O(cap) eviction claim, on the optimized HLO
+# the O(cap) eviction claim, on the optimized HLO (via the auditor —
+# repro.analysis.audit owns the single definition of this invariant)
 # ---------------------------------------------------------------------------
-
-
-def _sliding_hlo(eng, S, cap, dim, chunk, ydtype):
-    state = eng.init_state()
-    xs = jnp.zeros((chunk, S, dim))
-    ys = jnp.zeros((chunk, S), ydtype)
-    ts = jnp.zeros((chunk, S))
-    return eng._step_many.lower(
-        state, xs, ys, ts, eng._windows(state),
-        jnp.ones((chunk, S), bool)).compile().as_text()
 
 
 @pytest.mark.parametrize("kind", ["class", "reg"])
@@ -440,22 +430,24 @@ def test_ring_sliding_step_never_materializes_cap_sq(kind):
     step: the distance matrix may only appear as a parameter, inside
     reductions, and as in-place dynamic-update-slice writes. The compact
     layout is the positive control — its per-tick compaction trips the
-    same detector."""
+    same detector. Asserted through ``audit.dense_tick_violations``,
+    the same predicate the CI audit gate runs over the whole matrix."""
+    from repro.analysis import audit as audit_m
+
     S, cap, dim, k, chunk = 2, 64, 8, 5, 4
     min_bytes = S * cap * cap * 4  # a full f32 (S, cap, cap) result
     kw = dict(n_sessions=S, capacity=cap, dim=dim, k=k, window=cap)
     if kind == "class":
         mk = lambda layout: ServingEngine(**kw, n_labels=2, layout=layout)
-        ydt = jnp.int32
     else:
         mk = lambda layout: RegressionServingEngine(**kw, layout=layout)
-        ydt = jnp.float32
-    ring = hlo_m.dense_materializations(
-        _sliding_hlo(mk("ring"), S, cap, dim, chunk, ydt), min_bytes)
-    per_tick = [r for r in ring if r["mult"] > 1]
+    ring_hlo = mk("ring").lower_tick(chunk).compile().as_text()
+    per_tick = audit_m.dense_tick_violations(ring_hlo, min_bytes)
     assert not per_tick, per_tick
-    compact = hlo_m.dense_materializations(
-        _sliding_hlo(mk("compact"), S, cap, dim, chunk, ydt), min_bytes)
-    assert any(r["mult"] > 1 for r in compact), (
+    compact_hlo = mk("compact").lower_tick(chunk).compile().as_text()
+    assert audit_m.dense_tick_violations(compact_hlo, min_bytes), (
         "positive control: the compaction layout should materialize "
         "(cap, cap) buffers per tick")
+    # and the ring tick keeps its donated buffers aliased (no leak)
+    assert not audit_m.alias_violations(
+        ring_hlo, len(jax.tree_util.tree_leaves(mk("ring").init_state())))
