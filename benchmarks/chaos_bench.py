@@ -1,0 +1,209 @@
+"""Chaos-engineering benchmarks: guarded-tick overhead and keyed
+fault-suite smoke (repro.robustness). Writes ``chaos*`` rows into the
+shared BENCH_serve.json.
+
+Rows
+----
+chaos_guard_overhead
+    The ``TickGuard`` admission + poison-sweep cost on the chunked
+    observe hot path, measured exactly like serve_bench's
+    instrumentation overhead: a plain engine and a guarded one with
+    identical geometry and (clean) traffic alternate timed samples, and
+    the reported overhead is the median of the per-round paired ratios
+    (drift cancels within a pair, OS spikes fall to the median). The
+    row also asserts the guard's bit-neutrality contract: the two final
+    states must be leaf-for-leaf identical. CI gates the overhead at
+    5 % (``.github/workflows/ci.yml`` chaos job).
+
+chaos_fault_saver
+    A keyed transient write fault (``write_fail``, times=2) through the
+    async sharded saver: the row records the retries the backoff loop
+    absorbed and that the step still committed.
+
+chaos_fault_restore
+    A flipped byte in the latest committed shard: the row records the
+    fallback walk to the previous committed step and that the restored
+    state is the previous step's, bit-exact.
+
+    PYTHONPATH=src python benchmarks/chaos_bench.py [--out ...] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _traffic(sessions, chunk, dim, seed=7):
+    key = jax.random.PRNGKey(seed)
+    kx, ky, kt = jax.random.split(key, 3)
+    xs = jax.random.normal(kx, (chunk, sessions, dim), jnp.float32)
+    ys = jax.random.bernoulli(ky, 0.5, (chunk, sessions)).astype(jnp.int32)
+    ts = jax.random.uniform(kt, (chunk, sessions), jnp.float32)
+    return xs, ys, ts
+
+
+def run_guard_overhead(*, sessions=8, capacity=256, dim=16, k=7, chunk=64,
+                       rounds=15, chunks_per_sample=3):
+    """Paired plain-vs-guarded overhead on the chunked observe path."""
+    from repro.robustness import TickGuard
+    from repro.serving import ServingEngine
+
+    window = capacity // 2
+
+    def mk():
+        return ServingEngine(n_sessions=sessions, capacity=capacity,
+                             dim=dim, k=k, n_labels=2, window=window)
+
+    xs, ys, ts = _traffic(sessions, chunk, dim)
+    drivers = {False: mk(), True: TickGuard(mk())}
+    states, times = {}, {False: [], True: []}
+    for g, drv in drivers.items():
+        st, p = drv.observe_many(drv.init_state(), xs, ys, ts)  # compile
+        jax.block_until_ready(p)
+        states[g] = st
+    for r in range(rounds):
+        # interleaved, alternating order: shared noise cancels in the
+        # per-round ratio, position effects cancel in the median
+        order = (False, True) if r % 2 == 0 else (True, False)
+        for g in order:
+            st = states[g]
+            t0 = time.perf_counter()
+            for _ in range(chunks_per_sample):
+                st, p = drivers[g].observe_many(st, xs, ys, ts)
+            jax.block_until_ready(p)
+            times[g].append((time.perf_counter() - t0) / chunks_per_sample)
+            states[g] = st
+    same = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(states[False]),
+                        jax.tree_util.tree_leaves(states[True])))
+    ratios = sorted(g / p for p, g in zip(times[False], times[True]))
+    frac = ratios[len(ratios) // 2] - 1.0
+    row = {
+        "bench_kind": "chaos_guard_overhead",
+        "sessions": sessions,
+        "capacity": capacity,
+        "window": window,
+        "chunk": chunk,
+        "rounds": rounds,
+        "observe_many_s_plain": min(times[False]),
+        "observe_many_s_guarded": min(times[True]),
+        "guard_overhead_frac": frac,
+        "bit_identical_clean": bool(same),
+    }
+    print(f"[chaos_bench] guard overhead cap={capacity} "
+          f"plain {row['observe_many_s_plain'] * 1e3:.2f}ms "
+          f"guarded {row['observe_many_s_guarded'] * 1e3:.2f}ms "
+          f"({100 * frac:+.1f}%) "
+          f"{'bit-identical' if same else 'STATE MISMATCH'}")
+    return [row]
+
+
+def run_fault_suite(*, sessions=4, capacity=32, dim=4, k=3, seed=11):
+    """Keyed I/O fault smoke through the saver / store counters."""
+    from repro.robustness import (Fault, FaultInjector, FaultPlan,
+                                  flip_byte)
+    from repro.serving import AsyncShardedSaver, ServingEngine, SessionStore
+    from repro.telemetry import MetricsRegistry
+
+    eng = ServingEngine(n_sessions=sessions, capacity=capacity, dim=dim,
+                        k=k, n_labels=2, window=capacity // 2)
+    state = eng.init_state()
+    xs, ys, ts = _traffic(sessions, 8, dim, seed=seed)
+    state, _ = eng.observe_many(state, xs, ys, ts)
+
+    rows = []
+    # -- transient write fault absorbed by the saver's retry loop ----------
+    metrics = MetricsRegistry()
+    plan = FaultPlan(seed, (Fault("store.write", 5, "write_fail",
+                                  times=2),))
+    with tempfile.TemporaryDirectory() as root:
+        store = SessionStore(root, metrics=metrics,
+                             injector=FaultInjector(plan, metrics=metrics))
+        saver = AsyncShardedSaver(store, 1, metrics=metrics, seed=seed)
+        t0 = time.perf_counter()
+        saver.save(5, state, meta=eng.meta())
+        saver.close()
+        dt = time.perf_counter() - t0
+        committed = store.latest_step() == 5
+    retries = metrics.counter("snapshot_retries_total").value
+    rows.append({
+        "bench_kind": "chaos_fault_saver",
+        "sessions": sessions,
+        "capacity": capacity,
+        "injected_write_failures": 2,
+        "snapshot_retries": retries,
+        "committed": bool(committed),
+        "save_wall_s": dt,
+    })
+    print(f"[chaos_bench] saver: 2 transient write fault(s) -> "
+          f"{retries:.0f} retries, "
+          f"{'committed' if committed else 'NOT COMMITTED'}")
+
+    # -- corrupted latest shard: restore walks back one committed step -----
+    metrics = MetricsRegistry()
+    with tempfile.TemporaryDirectory() as root:
+        store = SessionStore(root, metrics=metrics)
+        store.save(1, state, meta=eng.meta(), blocking=True)
+        state2, _ = eng.observe_many(state, xs, ys, ts)
+        store.save(2, state2, meta=eng.meta(), blocking=True)
+        step_dir = os.path.join(store.root, f"step_{2:09d}")
+        shard = next(os.path.join(step_dir, f)
+                     for f in sorted(os.listdir(step_dir))
+                     if f.endswith(".npz"))
+        flip_byte(shard, seed=seed)
+        t0 = time.perf_counter()
+        got, got_step, _meta = store.restore()
+        dt = time.perf_counter() - t0
+        same = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree_util.tree_leaves(state),
+                            jax.tree_util.tree_leaves(got)))
+    fallbacks = metrics.counter("restore_fallback_total").value
+    rows.append({
+        "bench_kind": "chaos_fault_restore",
+        "sessions": sessions,
+        "capacity": capacity,
+        "restore_fallbacks": fallbacks,
+        "recovered_step": int(got_step),
+        "recovered_bit_exact": bool(same),
+        "restore_wall_s": dt,
+    })
+    print(f"[chaos_bench] restore: flipped byte in step 2 -> "
+          f"fell back to step {got_step} "
+          f"({fallbacks:.0f} fallback(s), "
+          f"{'bit-exact' if same else 'MISMATCH'})")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller geometry, fewer rounds")
+    args = ap.parse_args(argv)
+    # the quick gate keeps the default geometry AND the full round
+    # count: the guard's cost is a fixed per-chunk term, so a smaller
+    # chunk would inflate the measured fraction past what production
+    # chunking ever sees, and fewer rounds lets single-run noise
+    # through the paired-ratio median
+    results = run_guard_overhead()
+    results += run_fault_suite()
+    try:
+        from benchmarks.common import merge_bench_rows
+    except ImportError:
+        from common import merge_bench_rows
+    merge_bench_rows(args.out, results, owned_prefixes=("chaos",))
+    print(f"[chaos_bench] wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -53,6 +53,49 @@ def _fleet_rows(quick: bool) -> list[str]:
     return rows
 
 
+def _faults_rows(quick: bool) -> list[str]:
+    """Run chaos_bench in a child process and render its rows as CSV."""
+    import json
+    import os
+    import subprocess
+    import tempfile
+
+    script = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "chaos_bench.py")
+    with tempfile.TemporaryDirectory() as td:
+        out = os.path.join(td, "chaos.json")
+        cmd = [sys.executable, script, "--out", out]
+        if quick:
+            cmd.append("--quick")
+        subprocess.run(cmd, check=True)
+        with open(out) as f:
+            results = json.load(f)["results"]
+    rows = []
+    for r in results:
+        if r["bench_kind"] == "chaos_guard_overhead":
+            rows.append(row(
+                "chaos/guard_overhead",
+                f"S={r['sessions']},cap={r['capacity']}",
+                r["observe_many_s_guarded"] / r["chunk"],
+                f"overhead={100 * r['guard_overhead_frac']:+.1f}% "
+                f"plain={r['observe_many_s_plain'] * 1e3:.2f}ms "
+                f"bit_identical={r['bit_identical_clean']}"))
+        elif r["bench_kind"] == "chaos_fault_saver":
+            rows.append(row(
+                "chaos/fault_saver", f"S={r['sessions']}",
+                r["save_wall_s"],
+                f"retries={r['snapshot_retries']:.0f} "
+                f"committed={r['committed']}"))
+        elif r["bench_kind"] == "chaos_fault_restore":
+            rows.append(row(
+                "chaos/fault_restore", f"S={r['sessions']}",
+                r["restore_wall_s"],
+                f"fallbacks={r['restore_fallbacks']:.0f} "
+                f"step={r['recovered_step']} "
+                f"bit_exact={r['recovered_bit_exact']}"))
+    return rows
+
+
 def _audit_rows(quick: bool) -> list[str]:
     """Run the static invariant audit in a child process, render rows.
 
@@ -185,6 +228,11 @@ def main(argv=None) -> int:
         # devices require XLA_FLAGS before jax's first import, and this
         # module imported jax lines ago.
         "fleet": lambda: _fleet_rows(args.quick),
+        # chaos harness: guarded-tick overhead (5% CI budget) + keyed
+        # I/O fault smoke (saver retries, restore fallback).
+        # Subprocessed like fleet to keep this process's jax state out
+        # of the measured child.
+        "faults": lambda: _faults_rows(args.quick),
         "roofline": lambda: roofline.run(mesh_filter=None),
         # static invariant audit alongside the perf rows (subprocessed
         # like fleet; raises — and so records ERROR — on any violation)

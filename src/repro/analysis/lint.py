@@ -22,6 +22,13 @@ benches rely on but that HLO-level checks cannot see:
   ``donate_argnums`` in the serving/regression/core layers must be
   conditioned on a ``donate`` flag (the engines' ``donate=False``
   contract).
+* ``swallowed-exception`` — the durability layers (``serving/``,
+  ``checkpoint/``, ``robustness/``) must never silently eat an error:
+  a bare ``except:`` or a handler whose whole body is ``pass`` /
+  ``...`` / ``continue`` hides exactly the I/O failures the chaos
+  suite injects (a swallowed write error becomes a half-written
+  snapshot that only surfaces at restore time). Handlers must re-raise,
+  bind/record the exception, or fall back explicitly.
 
 Lines carrying ``# audit: allow`` are exempt (one escape hatch, visible
 in review). Pure stdlib — importable before jax, usable in CI without a
@@ -290,11 +297,55 @@ def _lint_donate(path, tree, lines, out):
                 "engines' donate=False contract must stay honest"))
 
 
+#: layers where an except handler may not silently swallow the error
+_SWALLOW_SCOPED = (os.path.join("repro", "serving"),
+                   os.path.join("repro", "checkpoint"),
+                   os.path.join("repro", "robustness"))
+
+#: handler bodies that discard the exception without a trace
+_SWALLOW_STMTS = (ast.Pass, ast.Continue)
+
+
+def _swallows(handler: ast.ExceptHandler) -> bool:
+    """True when the handler body does nothing with the error."""
+    for stmt in handler.body:
+        if isinstance(stmt, _SWALLOW_STMTS):
+            continue
+        if isinstance(stmt, ast.Expr) and isinstance(
+                stmt.value, ast.Constant):  # `...` or a bare docstring
+            continue
+        return False
+    return True
+
+
+def _lint_swallowed(path, tree, lines, out):
+    norm = path.replace("\\", "/")
+    if not any(s.replace(os.sep, "/") in norm for s in _SWALLOW_SCOPED):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None and not _allowed(lines, node.lineno):
+            out.append(Violation(
+                "swallowed-exception", path, node.lineno,
+                "bare except: in a durability layer catches "
+                "KeyboardInterrupt/SystemExit and hides injected I/O "
+                "faults; catch a concrete exception type"))
+            continue
+        if _swallows(node) and not _allowed(lines, node.lineno):
+            out.append(Violation(
+                "swallowed-exception", path, node.lineno,
+                "except handler silently discards the error; re-raise, "
+                "record it, or fall back explicitly (# audit: allow to "
+                "opt out)"))
+
+
 _RULES = (_lint_randomness, _lint_host_sync, _lint_tenant_loops,
-          _lint_donate)
+          _lint_donate, _lint_swallowed)
 
 RULE_NAMES = ("unkeyed-randomness", "host-sync-in-jit",
-              "tenant-python-loop", "donate-inconsistent")
+              "tenant-python-loop", "donate-inconsistent",
+              "swallowed-exception")
 
 
 def lint_paths(paths) -> list:

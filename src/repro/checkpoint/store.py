@@ -53,9 +53,14 @@ def _tree_paths(tree):
 
 
 class CheckpointStore:
-    def __init__(self, root: str, keep: int = 3):
+    def __init__(self, root: str, keep: int = 3, *, injector=None):
         self.root = root
         self.keep = keep
+        #: optional ``robustness.faults.FaultInjector`` — the chaos
+        #: harness's hook into the write path (sites ``store.write``,
+        #: ``store.shard``, ``store.manifest``, ``store.commit``).
+        #: ``None`` in production; injection points are no-ops then.
+        self.injector = injector
         os.makedirs(root, exist_ok=True)
         self._thread: threading.Thread | None = None
         self._error: Exception | None = None
@@ -89,6 +94,9 @@ class CheckpointStore:
             self._thread.start()
 
     def _write(self, step: int, host_leaves, treedef_str: str, extra: dict):
+        inj = self.injector
+        if inj is not None:
+            inj.enter("store.write", step)
         d = _step_dir(self.root, step)
         tmp = d + ".tmp"
         if os.path.exists(tmp):
@@ -118,13 +126,22 @@ class CheckpointStore:
         for si, idxs in enumerate(shards):
             fname = f"shard_{si:05d}.npz"
             path = os.path.join(tmp, fname)
+            if inj is not None:
+                inj.enter("store.shard", step)
             np.savez(path, **{str(i): host_leaves[i] for i in idxs})
             with open(path, "rb") as f:
                 digest = hashlib.sha256(f.read()).hexdigest()
+            if inj is not None:
+                # AFTER checksumming: a torn/corrupted write the writer
+                # itself cannot see — restore's verify catches it
+                inj.mutate_file("store.shard", step, path)
+                digest = inj.mutate_digest("store.manifest", step, digest)
             manifest["shards"].append(
                 {"file": fname, "leaves": idxs, "sha256": digest})
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        if inj is not None:
+            inj.enter("store.commit", step)
         with open(os.path.join(tmp, "COMMITTED"), "w") as f:
             f.write(str(step))
         if os.path.exists(d):
@@ -168,16 +185,55 @@ class CheckpointStore:
                                "manifest.json")) as f:
             return json.load(f)
 
+    def discard(self, step: int) -> None:
+        """Drop a step's directory (and any half-written tmp) so
+        ``latest_step`` can never point at it — the saver calls this
+        after exhausting retries on a failed write. Never raises."""
+        shutil.rmtree(_step_dir(self.root, step), ignore_errors=True)
+        shutil.rmtree(_step_dir(self.root, step) + ".tmp",
+                      ignore_errors=True)
+
     def restore(self, like_tree, step: int | None = None, *,
-                shardings=None, verify: bool = True):
+                shardings=None, verify: bool = True, on_fallback=None):
         """Restore into the structure of ``like_tree``; re-place on any
-        sharding (elastic: the saved mesh need not match)."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
+        sharding (elastic: the saved mesh need not match).
+
+        ``like_tree`` may be a callable ``manifest -> tree`` so the
+        target structure can be rebuilt per candidate step (geometry
+        may differ across steps). With ``step=None`` a corrupted latest
+        step (unreadable manifest, checksum mismatch, torn shard) FALLS
+        BACK to the previous COMMITTED step — ``on_fallback(step, exc)``
+        fires per skipped step — instead of raising while valid older
+        snapshots sit on disk. An explicit ``step`` still raises: the
+        caller asked for that step, not whichever one survives.
+        """
+        if step is not None:
+            return self._restore_step(like_tree, step,
+                                      shardings=shardings, verify=verify)
+        steps = self.committed_steps()
+        if not steps:
             raise FileNotFoundError(f"no committed checkpoints in "
                                     f"{self.root}")
+        last_err = None
+        for s in reversed(steps):
+            try:
+                return self._restore_step(like_tree, s,
+                                          shardings=shardings,
+                                          verify=verify)
+            except Exception as e:  # noqa: BLE001 — walk-back, re-raised
+                last_err = e
+                if on_fallback is not None:
+                    on_fallback(s, e)
+        raise IOError(
+            f"all {len(steps)} committed step(s) in {self.root} failed "
+            f"to restore; last error: {last_err}") from last_err
+
+    def _restore_step(self, like_tree, step: int, *, shardings=None,
+                      verify: bool = True):
         d = _step_dir(self.root, step)
         manifest = self.read_manifest(step)
+        if callable(like_tree):
+            like_tree = like_tree(manifest)
         leaves, treedef = _tree_paths(like_tree)
         if len(leaves) != manifest["n_leaves"]:
             raise ValueError(

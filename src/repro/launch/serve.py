@@ -101,6 +101,75 @@ def _class_drift_traffic(args, S, T, dim):
     return X, y, taus, drifted
 
 
+def _chaos_traffic(args, X, y, taus, *, mode):
+    """``--faults SEED``: corrupt the (S, T) synthetic traffic with a
+    keyed ``robustness.faults.FaultPlan`` (NaN/Inf features,
+    out-of-range labels/taus). Returns numpy copies — the engine casts
+    on dispatch — or the inputs untouched when chaos is off."""
+    if args.faults < 0:
+        return X, y, taus
+    import numpy as np
+
+    from repro.robustness import VALUE_FAULTS, FaultPlan, corrupt_traffic
+
+    X, y, taus = np.array(X), np.array(y), np.array(taus)
+    S, T = y.shape
+    plan = FaultPlan.random(args.faults, steps=T, tenants=S,
+                            rate=args.fault_rate, kinds=VALUE_FAULTS)
+    hits = corrupt_traffic(plan, X, y, taus, mode=mode, n_labels=2,
+                           time_axis=1)
+    print(f"[serve] chaos: {len(plan)} traffic fault(s) over {T} steps "
+          f"(seed {args.faults}, rate {args.fault_rate}, "
+          f"{len({h[1] for h in hits})} tenant(s) hit)")
+    return X, y, taus
+
+
+def _maybe_guard(args, eng, state, metrics, tracer):
+    """``--guard``: wrap the engine in a ``TickGuard`` (admission +
+    poison-lane quarantine). With ``--snapshot-dir`` an initial
+    committed snapshot seeds the quarantine-restore source."""
+    if not args.guard:
+        return eng, None
+    from repro.robustness import TickGuard
+
+    store = None
+    if args.snapshot_dir:
+        from repro.serving import SessionStore
+        store = SessionStore(args.snapshot_dir, metrics=metrics,
+                             tracer=tracer)
+        store.save(0, state, meta=eng.meta(), blocking=True)
+    guard = TickGuard(eng, store=store, metrics=metrics)
+    src = "snapshot" if store is not None else "none (tripped lanes stay frozen)"
+    print(f"[serve] guard: admission + quarantine on (restore source: {src})")
+    return guard, guard
+
+
+def _drain_guard(guard, state):
+    if guard is None:
+        return state
+    state = guard.finalize(state)  # flush the deferred poison sweep
+    rep = guard.drain()
+    print(f"[serve] guard: rejected {sum(rep['rejected'].values())} "
+          f"input(s) {dict(rep['rejected'])}, "
+          f"{rep['quarantines']} quarantine(s), "
+          f"{rep['restores']} restore(s), "
+          f"{len(rep['quarantined_lanes'])} lane(s) still frozen")
+    return state
+
+
+def _snapshot_injector(args, metrics):
+    """``--faults`` + ``--snapshot-dir``: an I/O fault injector for the
+    snapshot roundtrip — one transient write failure on the final save,
+    so every chaos run exercises the async saver's retry loop (the
+    randomized keyed plans live in the test/bench suites)."""
+    if args.faults < 0:
+        return None
+    from repro.robustness import Fault, FaultInjector, FaultPlan
+    plan = FaultPlan(args.faults, (
+        Fault("store.write", args.steps, "write_fail", times=1),))
+    return FaultInjector(plan, metrics=metrics)
+
+
 def _check_shards(shards: int, sessions: int) -> None:
     """CLI-friendly validation of --shards against --sessions and the
     visible device count (engine ctors raise ValueError for the same)."""
@@ -208,19 +277,22 @@ def _serve_sessions(args) -> int:
           f"(window={args.window}, k={args.k}, shards={args.shards})")
 
     X, y, taus, drifted = _class_drift_traffic(args, S, T, dim)
+    X, y, taus = _chaos_traffic(args, X, y, taus, mode="classification")
+    drv, guard = _maybe_guard(args, eng, state, metrics, tracer)
     pvals = np.zeros((S, T), np.float32)
-    state, _ = eng.observe(  # warmup tick 0 outside the clock (compile)
+    state, _ = drv.observe(  # warmup tick 0 outside the clock (compile)
         state, X[:, 0], y[:, 0], taus[:, 0])
     pvals[:, 0] = np.nan
     t0 = time.time()
     for t in range(1, T):
-        state, p = eng.observe(state, X[:, t], y[:, t], taus[:, t])
+        state, p = drv.observe(state, X[:, t], y[:, t], taus[:, t])
         pvals[:, t] = np.asarray(p)
     dt = time.time() - t0
     metrics.gauge("serve_wall_s", mode="classification").set(dt)
     metrics.gauge("serve_session_steps_per_s", mode="classification").set(
         S * (T - 1) / dt)
     eng.telemetry.drain()
+    state = _drain_guard(guard, state)
     _validity_metrics(pvals[:, 1:], drifted, args, engine="classification",
                       metrics=metrics)
 
@@ -241,9 +313,15 @@ def _snapshot_roundtrip(args, state, eng, metrics, tracer) -> int:
 
     from repro.serving import AsyncShardedSaver, SessionStore
 
-    store = SessionStore(args.snapshot_dir, metrics=metrics, tracer=tracer)
-    if args.shards > 1:
-        saver = AsyncShardedSaver(store, args.shards, metrics=metrics)
+    injector = _snapshot_injector(args, metrics)
+    store = SessionStore(args.snapshot_dir, metrics=metrics, tracer=tracer,
+                         injector=injector)
+    if args.shards > 1 or injector is not None:
+        # chaos mode routes even single-shard saves through the async
+        # saver: its keyed-backoff retry loop is what absorbs injected
+        # transient write failures
+        saver = AsyncShardedSaver(store, max(args.shards, 1),
+                                  metrics=metrics, seed=args.seed)
         saver.save(args.steps, state, meta=eng.meta())
         saver.close()
     else:
@@ -364,20 +442,23 @@ def _serve_regression(args) -> int:
     late = jnp.arange(T)[None, :] >= T // 2
     y = jnp.where(drifted[:, None] & late, y + args.drift, y)
     taus = jax.random.uniform(kt, (S, T), dtype=jnp.float32)
+    X, y, taus = _chaos_traffic(args, X, y, taus, mode="regression")
+    drv, guard = _maybe_guard(args, eng, state, metrics, tracer)
 
     pvals = np.zeros((S, T), np.float32)
-    state, _ = eng.observe(  # warmup tick 0 outside the clock (compile)
+    state, _ = drv.observe(  # warmup tick 0 outside the clock (compile)
         state, X[:, 0], y[:, 0], taus[:, 0])
     pvals[:, 0] = np.nan
     t0 = time.time()
     for t in range(1, T):
-        state, p = eng.observe(state, X[:, t], y[:, t], taus[:, t])
+        state, p = drv.observe(state, X[:, t], y[:, t], taus[:, t])
         pvals[:, t] = np.asarray(p)
     dt = time.time() - t0
     metrics.gauge("serve_wall_s", mode="regression").set(dt)
     metrics.gauge("serve_session_steps_per_s", mode="regression").set(
         S * (T - 1) / dt)
     eng.telemetry.drain()
+    state = _drain_guard(guard, state)
 
     warm = 2 * args.k  # k-NN warmup: earliest p-values are degenerate
     _validity_metrics(pvals[:, warm:], drifted, args, engine="regression",
@@ -415,11 +496,21 @@ def _serve_replay(args) -> int:
     speedup = float(args.speedup)  # accepts "inf"
 
     if args.replay.startswith("loadgen:"):
+        plan = None
+        if args.faults >= 0:
+            from repro.robustness import VALUE_FAULTS, FaultPlan
+            plan = FaultPlan.random(
+                args.faults, steps=args.steps, tenants=args.sessions or 8,
+                rate=args.fault_rate,
+                kinds=VALUE_FAULTS + ("duplicate_arrival", "delay"),
+                param=0.001)
+            print(f"[serve] chaos: stamping {len(plan)} fault(s) onto "
+                  f"the generated trace (seed {args.faults})")
         workload = args.replay.split(":", 1)[1]
         records = loadgen.generate(
             workload, ops=args.steps, tenants=args.sessions or 8,
             capacity=args.capacity, engine=kind, rate=args.rate,
-            seed=args.seed, slo_s=slo_s)
+            seed=args.seed, slo_s=slo_s, faults=plan)
         src = args.replay
     else:
         records = list(iter_trace(args.replay))
@@ -461,7 +552,9 @@ def _serve_replay(args) -> int:
                  window=min(args.window, cap),  # trace may be smaller
                  speedup=speedup, seed=args.seed,
                  slo_s=slo_s, chunk=chunk, eps=args.eps, metrics=metrics,
-                 tracer=tracer, shards=args.shards)
+                 tracer=tracer, shards=args.shards,
+                 shed_depth=args.shed_depth if args.shed_depth > 0 else None,
+                 guard=args.guard)
     rep = res.report
     print(f"[serve] replay {src} -> {kind} engine "
           f"({rep['tenants']} tenants x cap {rep['capacity']}, "
@@ -483,6 +576,18 @@ def _serve_replay(args) -> int:
         print(f"  SLO {args.slo_ms:g}ms: violation fraction "
               f"{rep['slo_violation_frac']:.4f}")
     print(f"  queue depth max {rep['queue_depth_max']:.0f}")
+    if rep.get("duplicates_dropped"):
+        print(f"  chaos: {rep['duplicates_dropped']} duplicate "
+              f"arrival(s) dropped")
+    if rep.get("shed_depth") is not None:
+        print(f"  shed(depth {rep['shed_depth']}): "
+              f"{rep['shed_ops']} read(s) shed, "
+              f"{rep['deferred_observes']} observe(s) deferred")
+    if "guard" in rep:
+        g = rep["guard"]
+        print(f"  guard: rejected {sum(g['rejected'].values())} input(s) "
+              f"{dict(g['rejected'])}, {g['quarantines']} quarantine(s), "
+              f"{g['restores']} restore(s)")
     _emit_report(args, metrics, tracer, mode=f"replay:{kind}")
     return 0
 
@@ -562,6 +667,25 @@ def main(argv=None) -> int:
     ap.add_argument("--annotate", action="store_true",
                     help="with --trace-out: wrap traced ops in "
                          "jax.profiler.TraceAnnotation scopes")
+    # chaos / fault tolerance (repro.robustness)
+    ap.add_argument("--faults", type=int, default=-1, metavar="SEED",
+                    help="inject a keyed random fault plan (repro."
+                         "robustness.FaultPlan.random) with this seed: "
+                         "engine modes corrupt the synthetic traffic and "
+                         "(with --snapshot-dir) the snapshot I/O path; "
+                         "loadgen replay stamps value/duplicate/delay "
+                         "faults onto the trace. -1 (default) disables")
+    ap.add_argument("--fault-rate", type=float, default=0.02,
+                    help="per-(step, site) fault probability for --faults")
+    ap.add_argument("--guard", action="store_true",
+                    help="wrap the engine in the robustness TickGuard: "
+                         "in-graph admission of observe inputs + poison-"
+                         "lane quarantine (restore from --snapshot-dir "
+                         "when set). Engine-serving and replay modes")
+    ap.add_argument("--shed-depth", type=int, default=0,
+                    help="with --replay: shed reads once the replay "
+                         "backlog exceeds this depth and defer observes "
+                         "past twice it (0 = no shedding)")
     # static invariant audit (repro.analysis.audit)
     ap.add_argument("--audit", action="store_true",
                     help="run the compiled-artifact invariant audit over "
@@ -584,6 +708,9 @@ def main(argv=None) -> int:
         if args.measure:
             if args.regression:
                 raise SystemExit("--measure and --regression are exclusive")
+            if args.guard or args.faults >= 0:
+                raise SystemExit("--guard/--faults cover the engine and "
+                                 "replay modes, not --measure")
             return _serve_registry(args)
         if args.regression:
             return _serve_regression(args)

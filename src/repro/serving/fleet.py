@@ -62,7 +62,7 @@ def pow2_buckets(cap_min: int, cap_max: int) -> list[int]:
     return bounds
 
 
-def _repad_cls(sess: Session, new_cap: int) -> Session:
+def repad_cls(sess: Session, new_cap: int) -> Session:
     """``serving.session.grow`` to an arbitrary target capacity."""
     from repro.core.online import BIG, OnlineKnnState
 
@@ -84,7 +84,7 @@ def _repad_cls(sess: Session, new_cap: int) -> Session:
     )
 
 
-def _repad_reg(state: RegStreamState, new_cap: int) -> RegStreamState:
+def repad_reg(state: RegStreamState, new_cap: int) -> RegStreamState:
     """``regression.session.grow`` to an arbitrary target capacity."""
     from repro.core.regression import BIG
 
@@ -151,13 +151,21 @@ class Fleet:
                 ``shards``); a full pool just spills into a sibling.
     shards:     tenant-shard every pool engine across this many devices.
     metrics:    optional ``MetricsRegistry`` for fleet counters/gauges.
+    guard:      admission-check observe inputs host-side (features
+                finite, label in range, tau in [0, 1]); a rejected
+                tenant's tick is never dispatched — its state stays
+                bitwise unchanged and it gets a NaN p-value back
+                (``fleet_rejected_observes_total``). The in-graph
+                equivalent for raw engines is
+                ``robustness.guard.TickGuard``.
     """
 
     def __init__(self, *, dim: int, k: int, n_labels: int = 2,
                  mode: str = "classification", cost_model=None,
                  cap_min: int = 32, cap_max: int = 4096,
                  cost_ratio: float = 2.0, pool_sessions: int = 64,
-                 dtype=jnp.float32, shards: int = 1, metrics=None):
+                 dtype=jnp.float32, shards: int = 1, metrics=None,
+                 guard: bool = False):
         if mode not in ("classification", "regression"):
             raise ValueError(f"unknown fleet mode {mode!r}")
         if cap_min < k:
@@ -170,6 +178,7 @@ class Fleet:
         self.shards = shards
         self.pool_sessions = -(-pool_sessions // shards) * shards
         self.metrics = metrics
+        self.guard = guard
         if cost_model is not None:
             self.buckets = cost_model.suggest_buckets(
                 cap_min=cap_min, cap_max=cap_max, cost_ratio=cost_ratio,
@@ -261,8 +270,8 @@ class Fleet:
         if new_cap <= src_cap:
             return
         src_pool = self._pools[src_cap][spi]
-        repad = (_repad_cls if self.mode == "classification"
-                 else _repad_reg)
+        repad = (repad_cls if self.mode == "classification"
+                 else repad_reg)
         lane_state = repad(src_pool.get_lane(slane), new_cap)
         del src_pool.lane_tenant[slane]
         src_pool.set_lane(slane, self._init_lane(src_pool.engine.capacity))
@@ -283,8 +292,40 @@ class Fleet:
         only past the last bucket does the old auto-grow fire), then
         each pool with traffic runs ONE engine tick with the other
         lanes masked inactive. Returns tid -> p-value (0-d jax array,
-        still async; ``float()`` to sync).
+        still async; ``float()`` to sync). With ``guard=True`` a
+        malformed item is rejected before dispatch (NaN p, state
+        untouched, occupancy unchanged).
         """
+        import numpy as np
+
+        if self.guard:
+            live = {}
+            out_rej: dict[Any, jnp.ndarray] = {}
+            for tid, (x, y, tau) in items.items():
+                ok = bool(np.all(np.isfinite(
+                    np.asarray(x, dtype=np.float64))))
+                yf = float(np.asarray(y).astype(np.float64))
+                if self.mode == "classification":
+                    ok = (ok and np.isfinite(yf)
+                          and 0 <= int(yf) < self.n_labels)
+                else:
+                    ok = ok and bool(np.isfinite(yf))
+                tau_f = float(tau)
+                ok = ok and bool(np.isfinite(tau_f)) and 0.0 <= tau_f <= 1.0
+                if ok:
+                    live[tid] = (x, y, tau)
+                else:
+                    self._counter("fleet_rejected_observes_total")
+                    out_rej[tid] = jnp.asarray(float("nan"),
+                                               dtype=self.dtype)
+            if out_rej:
+                items = live
+                out_rej.update(self._observe_live(items))
+                return out_rej
+            items = live
+        return self._observe_live(items)
+
+    def _observe_live(self, items: dict[Any, tuple]) -> dict[Any, jnp.ndarray]:
         last = self.buckets[-1]
         for tid in items:
             cap, _, _ = self._where[tid]
@@ -366,4 +407,9 @@ class Fleet:
                 "pools": pools}
 
 
-__all__ = ["Fleet", "pow2_buckets"]
+# historic private names (pre-robustness); the guard's lane-restore and
+# external callers use the public ones
+_repad_cls = repad_cls
+_repad_reg = repad_reg
+
+__all__ = ["Fleet", "pow2_buckets", "repad_cls", "repad_reg"]

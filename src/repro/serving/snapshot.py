@@ -131,9 +131,9 @@ class SessionStore:
     """
 
     def __init__(self, root: str, keep: int = 3, *, metrics=None,
-                 tracer=None):
+                 tracer=None, injector=None):
         self.root = root
-        self._store = CheckpointStore(root, keep=keep)
+        self._store = CheckpointStore(root, keep=keep, injector=injector)
         self._metrics = metrics
         self._tracer = tracer
 
@@ -164,19 +164,30 @@ class SessionStore:
     def latest_step(self) -> int | None:
         return self._store.latest_step()
 
+    def discard(self, step: int) -> None:
+        """Drop a step so ``latest_step`` never points at it (see
+        ``CheckpointStore.discard``)."""
+        self._store.discard(step)
+
     def restore(self, step: int | None = None
                 ) -> tuple[Session, int, dict[str, Any]]:
-        """Load (state, step, meta) — target shapes come from the manifest."""
+        """Load (state, step, meta) — target shapes come from the manifest.
+
+        Without an explicit ``step``, a corrupted latest snapshot falls
+        back to the previous committed one (``restore_fallback_total``
+        counts each skipped step); an explicit ``step`` still raises on
+        corruption.
+        """
+        def _on_fallback(s, exc):
+            if self._metrics is not None:
+                self._metrics.counter("restore_fallback_total").inc()
+
         def _restore():
-            s = step if step is not None else self._store.latest_step()
-            if s is None:
-                raise FileNotFoundError(
-                    f"no committed snapshots in {self.root}")
-            manifest = self._store.read_manifest(s)
-            like = _like_from_manifest(manifest)
-            state, s = self._store.restore(like, s)
+            state, s = self._store.restore(
+                _like_from_manifest, step, on_fallback=_on_fallback)
             if isinstance(state, list):  # legacy 5/6-leaf linear snapshot
                 state = _from_legacy(state)
+            manifest = self._store.read_manifest(s)
             return state, s, manifest.get("extra", {})
 
         return self._timed("snapshot_restore", _restore)
@@ -236,13 +247,24 @@ class AsyncShardedSaver:
     gives double buffering with backpressure instead of unbounded
     device-memory growth when snapshots outpace disk.
 
+    Transient write errors (``OSError``, incl. the chaos harness's
+    ``TransientWriteError``) are retried up to ``retries`` times on a
+    keyed deterministic exponential-backoff schedule
+    (``faults.backoff_schedule(seed, step, ...)`` — same (seed, step),
+    same waits; ``snapshot_retries_total`` counts them). Anything else
+    (incl. ``PermanentWriteError``) surfaces immediately. When retries
+    are exhausted the failed step is DISCARDED from the store before
+    the error is parked (``snapshot_failed_steps_total``), so
+    ``latest_step()`` can never point at a half-written snapshot.
+
     Worker errors surface on the *next* ``save``/``wait`` call — the
     serving loop finds out, just not mid-tick. Always ``wait()`` (or
     ``close()``) before reading the store back.
     """
 
     def __init__(self, store: SessionStore, shards: int, *, depth: int = 2,
-                 metrics=None):
+                 metrics=None, retries: int = 3, retry_base_s: float = 0.05,
+                 seed: int = 0):
         import queue as _queue
         import threading as _threading
 
@@ -252,6 +274,9 @@ class AsyncShardedSaver:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self.store = store
         self.shards = shards
+        self.retries = int(retries)
+        self.retry_base_s = float(retry_base_s)
+        self._seed = int(seed)
         self._metrics = metrics
         self._q: Any = _queue.Queue(maxsize=depth)
         self._err: BaseException | None = None
@@ -276,6 +301,29 @@ class AsyncShardedSaver:
             for i in range(self.shards)]
         self._q.put((step, slices, meta))
 
+    def _commit_with_retry(self, step: int, full, meta) -> None:
+        import time as _time
+
+        from repro.robustness.faults import (PermanentWriteError,
+                                             backoff_schedule)
+
+        delays = backoff_schedule(self._seed, step, self.retries,
+                                  self.retry_base_s)
+        attempt = 0
+        while True:
+            try:
+                self.store.save(step, full, meta=meta, blocking=True)
+                return
+            except PermanentWriteError:
+                raise
+            except OSError:
+                if attempt >= self.retries:
+                    raise
+                if self._metrics is not None:
+                    self._metrics.counter("snapshot_retries_total").inc()
+                _time.sleep(delays[attempt])
+                attempt += 1
+
     def _run(self) -> None:
         import time as _time
 
@@ -292,12 +340,19 @@ class AsyncShardedSaver:
                 host = [jax.device_get(s) for s in slices]  # shard-by-shard
                 full = jax.tree_util.tree_map(
                     lambda *ls: np.concatenate(ls, axis=0), *host)
-                self.store.save(step, full, meta=meta, blocking=True)
+                self._commit_with_retry(step, full, meta)
                 if self._metrics is not None:
                     self._metrics.histogram(
                         "snapshot_async_save_s", shards=self.shards
                     ).observe(_time.perf_counter() - t0)
             except BaseException as e:  # surfaced on next save()/wait()
+                # failed for good: drop the step so latest_step() can
+                # never point at a half-written snapshot (discard never
+                # raises — the original error is what surfaces)
+                self.store.discard(step)
+                if self._metrics is not None:
+                    self._metrics.counter(
+                        "snapshot_failed_steps_total").inc()
                 self._err = e
             finally:
                 self._q.task_done()

@@ -30,6 +30,15 @@ Every workload interleaves a read op (``predict`` for classification,
 randomness comes from one ``numpy`` Generator seeded by ``seed`` —
 byte-identical traces across runs.
 
+Passing a ``robustness.faults.FaultPlan`` via ``faults=`` stamps its
+traffic/timing schedule onto the records (tracer schema v3): a value
+fault at step s becomes ``rec["fault"] = {"kind", "tenant"}`` on the
+s-th observe record, a ``duplicate_arrival`` additionally picks the
+earlier observe it re-delivers (``of_seq``, keyed), and a ``delay``
+sets ``rec["delay_s"]``. The base trace is UNCHANGED by the plan
+(same rng consumption), so a faulted trace differs from its fault-free
+oracle only in the stamped fields.
+
     from repro.telemetry import loadgen, write_trace
     recs = loadgen.generate("bursty", ops=512, tenants=8, capacity=128)
     write_trace("bursty.jsonl", recs)
@@ -80,7 +89,8 @@ def generate(workload: str, *, ops: int, tenants: int, capacity: int,
              burst_period: float = 0.25, burst_duty: float = 0.2,
              burst_factor: float = 8.0, zipf_a: float = 1.2,
              zipf_active_frac: float = 0.5,
-             slo_s: float | None = None) -> list[dict[str, Any]]:
+             slo_s: float | None = None,
+             faults=None) -> list[dict[str, Any]]:
     """Build ``ops`` schema-valid trace records for one workload.
 
     ``rate`` is the mean arrival rate (ops/s) of the *trace clock*;
@@ -89,6 +99,8 @@ def generate(workload: str, *, ops: int, tenants: int, capacity: int,
     observes; 0 disables reads. ``zipf_active_frac`` sets the expected
     fraction of tenants active per zipf tick (sampled without
     replacement by Zipf weight — low-rank tenants appear rarely).
+    ``faults`` (a ``robustness.faults.FaultPlan``) stamps its traffic/
+    timing schedule onto the records — see the module docstring.
     Returns the records (write with ``tracer.write_trace``).
     """
     if workload not in WORKLOADS:
@@ -139,9 +151,38 @@ def generate(workload: str, *, ops: int, tenants: int, capacity: int,
                 act = rng.choice(tenants, size=n_active, replace=False,
                                  p=weights)
                 rec["active"] = sorted(int(s) for s in act)
+        if faults is not None and rec["op"] == "observe":
+            _stamp_faults(rec, faults, seq, tenants,
+                          [r["seq"] for r in records
+                           if r["op"] == "observe"])
         validate_record(rec)
         records.append(rec)
     return records
+
+
+def _stamp_faults(rec: dict[str, Any], faults, seq: int, tenants: int,
+                  observe_seqs: list) -> None:
+    """Stamp a FaultPlan's schedule for step ``seq`` onto one observe
+    record (schema v3 ``fault`` / ``delay_s`` fields). Duck-typed on
+    ``faults.at(site, step)`` / ``faults.seed`` so this module stays
+    free of a robustness import."""
+    for f in faults.at("traffic", seq):
+        if f.kind == "delay":
+            rec["delay_s"] = rec.get("delay_s", 0.0) + float(f.param)
+        elif f.kind == "duplicate_arrival":
+            if not observe_seqs:
+                continue  # nothing earlier to re-deliver
+            pick = np.random.default_rng(
+                (int(faults.seed), 0xD0B, seq))
+            rec["fault"] = {
+                "kind": f.kind,
+                "tenant": int(f.tenant) % tenants,
+                "of_seq": int(observe_seqs[
+                    int(pick.integers(len(observe_seqs)))]),
+            }
+        else:
+            rec["fault"] = {"kind": f.kind,
+                            "tenant": int(f.tenant) % tenants}
 
 
 __all__ = ["WORKLOADS", "generate"]

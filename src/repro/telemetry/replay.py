@@ -35,6 +35,30 @@ Semantics
   ``snapshot_*``) are skipped and counted in
   ``replay_skipped_ops_total``. Read ops map onto the engine's read
   path (classification: ``predict``; regression: ``intervals``).
+
+Fault schedule (tracer schema v3, ``robustness.faults``)
+--------------------------------------------------------
+* ``duplicate_arrival`` records are at-least-once re-deliveries of an
+  earlier event id: replay dedups them at ingest
+  (``replay_duplicates_dropped_total``) — the surviving stream is the
+  trace minus its duplicates, so the final state is bit-identical to
+  replaying the never-duplicated trace.
+* ``delay_s`` shifts a record's arrival to ``t + delay_s`` (the
+  injected dispatch delay); batches wait for their latest member.
+* Traffic value faults (``fault.kind`` in ``VALUE_FAULTS``) corrupt
+  that record's synthesized tick for ``fault["tenant"]`` — what the
+  ``guard=True`` admission check is there to catch.
+
+Overload controls
+-----------------
+``shed_depth=N`` enables queue-depth load shedding: when the backlog
+exceeds N, arriving READ ops are shed (counted per op in
+``replay_shed_ops_total``, never dispatched); past ``2 * N`` observes
+are DEFERRED (``replay_deferred_observes_total``) into a pending queue
+flushed every ``defer_flush`` ticks, before any dispatched read (reads
+see all prior writes), and at end of trace. Observe order is
+preserved, so the final engine state stays bit-identical to the
+unshed replay; deferred records pay their true (larger) sojourn.
 """
 from __future__ import annotations
 
@@ -128,7 +152,9 @@ def replay(records: Iterable[dict[str, Any]], *,
            seed: int = 0, slo_s: float | None = None,
            chunk: int | None = None, eps: float = 0.1,
            metrics: MetricsRegistry | None = None,
-           tracer: Tracer | None = None, shards: int = 1) -> ReplayResult:
+           tracer: Tracer | None = None, shards: int = 1,
+           shed_depth: int | None = None, defer_flush: int = 64,
+           guard: bool = False) -> ReplayResult:
     """Replay a trace against one engine; see module doc for semantics.
 
     ``records`` may be a list or a generator (``tracer.iter_trace``);
@@ -147,11 +173,23 @@ def replay(records: Iterable[dict[str, Any]], *,
     concatenated final state is bit-identical to the unsharded replay
     (tested). The report gains ``shards`` and ``per_shard`` (tenants,
     session steps, occupancy per shard).
+
+    ``shed_depth`` / ``defer_flush`` enable load shedding and
+    ``guard=True`` wraps every shard engine in a
+    ``robustness.guard.TickGuard`` (admission + quarantine; the
+    report gains a merged ``guard`` section) — module doc for both.
     """
     if speedup <= 0:
         raise ValueError("speedup must be > 0 (math.inf compresses)")
     metrics = metrics if metrics is not None else MetricsRegistry()
     all_recs = list(records)
+    def _is_dup(r):
+        return r.get("fault", {}).get("kind") == "duplicate_arrival"
+
+    n_dups = sum(1 for r in all_recs if _is_dup(r))
+    if n_dups:  # at-least-once delivery: drop re-delivered event ids
+        metrics.counter("replay_duplicates_dropped_total").inc(n_dups)
+        all_recs = [r for r in all_recs if not _is_dup(r)]
     played = [r for r in all_recs if r["op"] in _DRIVE_OPS | _READ_OPS]
     for r in all_recs:
         if r["op"] not in _DRIVE_OPS | _READ_OPS:
@@ -174,6 +212,11 @@ def replay(records: Iterable[dict[str, Any]], *,
                          n_labels=n_labels, metrics=shard_metrics[i],
                          tracer=tracer)
             for i in range(shards)]
+    drivers: list[Any] = engs
+    if guard:
+        from repro.robustness.guard import TickGuard
+        drivers = [TickGuard(engs[i], metrics=shard_metrics[i])
+                   for i in range(shards)]
     batches = _plan_batches(played, chunk)
 
     # ---- compile warmup: one throwaway dispatch per distinct shape ---------
@@ -191,7 +234,7 @@ def replay(records: Iterable[dict[str, Any]], *,
             xs, ys, taus = _stack_ticks(
                 [(10 ** 9 + wi, j) for j in range(T)], seed, S, dim,
                 engine)
-            warm_state, _ = eng.observe_many(
+            warm_state, _ = drivers[si].observe_many(
                 warm_state, xs[:, lo:hi], ys[:, lo:hi], taus[:, lo:hi])
         if warm_reads:
             _read(eng, warm_state, engine, seed, 10 ** 9, dim, eps)
@@ -202,7 +245,8 @@ def replay(records: Iterable[dict[str, Any]], *,
 
     states = [eng.init_state() for eng in engs]
     arrivals = ([0.0] * len(played) if math.isinf(speedup)
-                else [r["t"] / speedup for r in played])
+                else [(r["t"] + r.get("delay_s", 0.0)) / speedup
+                      for r in played])
     qhist = metrics.histogram(
         "replay_queue_depth",
         bounds=tuple(float(2 ** e) for e in range(0, 17)))
@@ -212,41 +256,14 @@ def replay(records: Iterable[dict[str, Any]], *,
     steps_total = 0
     arrived_ptr = 0
     completed = 0
+    shed_total = 0
+    deferred_total = 0
+    pending: list[list[int]] = []  # deferred observe batches, in order
+    pending_ticks = 0
     t0 = time.perf_counter()
-    for batch in batches:
-        recs = [played[i] for i in batch]
-        op = recs[0]["op"]
-        last_arr = arrivals[batch[-1]]
-        if not math.isinf(speedup):
-            wait = last_arr - (time.perf_counter() - t0)
-            if wait > 0:
-                time.sleep(wait)
-        now = time.perf_counter() - t0
-        while arrived_ptr < len(played) and arrivals[arrived_ptr] <= now:
-            arrived_ptr += 1
-        qhist.observe(max(arrived_ptr, batch[-1] + 1) - completed)
 
-        d0 = time.perf_counter()
-        if op in _DRIVE_OPS:
-            keys = [(played[i]["seq"], j) for i in batch
-                    for j in range(played[i].get("ticks", 1))]
-            xs, ys, taus = _stack_ticks(keys, seed, S, dim, engine)
-            active = _stack_active(
-                [played[i] for i in batch], S)
-            for si, eng in enumerate(engs):
-                lo, hi = cuts[si], cuts[si + 1]
-                states[si], _p = eng.observe_many(
-                    states[si], xs[:, lo:hi], ys[:, lo:hi],
-                    taus[:, lo:hi], active=active[:, lo:hi])
-            ticks_total += len(keys)
-            steps_total += int(active.sum())
-        else:
-            for si, eng in enumerate(engs):
-                _read(eng, states[si], engine, seed, recs[0]["seq"], dim,
-                      eps)
-        done = time.perf_counter() - t0
-        service = time.perf_counter() - d0
-
+    def _account(batch, done, service):
+        nonlocal slo_total, slo_checked, completed
         for i in batch:
             rec = played[i]
             sojourn = (service if math.isinf(speedup)
@@ -260,6 +277,88 @@ def replay(records: Iterable[dict[str, Any]], *,
                 if sojourn > slo:
                     slo_total += 1
         completed += len(batch)
+
+    def _dispatch_observes(batch):
+        nonlocal ticks_total, steps_total
+        keys = [(played[i]["seq"], j) for i in batch
+                for j in range(played[i].get("ticks", 1))]
+        xs, ys, taus = _stack_ticks(keys, seed, S, dim, engine)
+        _corrupt_batch(xs, ys, taus, [played[i] for i in batch],
+                       engine, n_labels)
+        active = _stack_active(
+            [played[i] for i in batch], S)
+        for si in range(shards):
+            lo, hi = cuts[si], cuts[si + 1]
+            states[si], _p = drivers[si].observe_many(
+                states[si], xs[:, lo:hi], ys[:, lo:hi],
+                taus[:, lo:hi], active=active[:, lo:hi])
+        ticks_total += len(keys)
+        steps_total += int(active.sum())
+
+    def _flush_pending():
+        """Dispatch the deferred observe batches (original batch
+        shapes, original order: bit-identical final state)."""
+        nonlocal pending, pending_ticks
+        if not pending:
+            return
+        d0 = time.perf_counter()
+        for pb in pending:
+            _dispatch_observes(pb)
+        done = time.perf_counter() - t0
+        service = time.perf_counter() - d0
+        for pb in pending:
+            _account(pb, done, service)
+        pending = []
+        pending_ticks = 0
+
+    for batch in batches:
+        recs = [played[i] for i in batch]
+        op = recs[0]["op"]
+        if not math.isinf(speedup):
+            # wait for the batch's LATEST member (injected delay_s can
+            # put it after the batch-closing record)
+            last_arr = max(arrivals[i] for i in batch)
+            wait = last_arr - (time.perf_counter() - t0)
+            if wait > 0:
+                time.sleep(wait)
+        now = time.perf_counter() - t0
+        while arrived_ptr < len(played) and arrivals[arrived_ptr] <= now:
+            arrived_ptr += 1
+        backlog = max(arrived_ptr, batch[-1] + 1) - completed
+        qhist.observe(backlog)
+
+        if op in _DRIVE_OPS:
+            if shed_depth is not None and backlog > 2 * shed_depth:
+                pending.append(batch)
+                pending_ticks += sum(played[i].get("ticks", 1)
+                                     for i in batch)
+                deferred_total += len(batch)
+                metrics.counter("replay_deferred_observes_total").inc(
+                    len(batch))
+                if pending_ticks >= defer_flush:
+                    _flush_pending()
+                continue
+            _flush_pending()  # observes stay in arrival order
+            d0 = time.perf_counter()
+            _dispatch_observes(batch)
+            done = time.perf_counter() - t0
+            _account(batch, done, time.perf_counter() - d0)
+        else:
+            if shed_depth is not None and backlog > shed_depth:
+                # shed reads first: cheaper to drop, no state impact
+                shed_total += len(batch)
+                metrics.counter("replay_shed_ops_total", op=op).inc(
+                    len(batch))
+                completed += len(batch)
+                continue
+            _flush_pending()  # a served read sees all prior writes
+            d0 = time.perf_counter()
+            for si, eng in enumerate(engs):
+                _read(eng, states[si], engine, seed, recs[0]["seq"], dim,
+                      eps)
+            done = time.perf_counter() - t0
+            _account(batch, done, time.perf_counter() - d0)
+    _flush_pending()
     wall = time.perf_counter() - t0
 
     # ---- per-shard accounting + registry merge -----------------------------
@@ -321,7 +420,24 @@ def replay(records: Iterable[dict[str, Any]], *,
         "per_op": per_op,
         "shards": shards,
         "per_shard": per_shard,
+        "shed_depth": shed_depth,
+        "shed_ops": shed_total,
+        "deferred_observes": deferred_total,
+        "duplicates_dropped": n_dups,
     }
+    if guard:
+        gtot: dict[str, Any] = {"rejected": {}, "quarantines": 0,
+                                "restores": 0, "quarantined_lanes": []}
+        for si, g in enumerate(drivers):
+            states[si] = g.finalize(states[si])  # flush deferred sweep
+            d = g.drain()
+            for kind, v in d["rejected"].items():
+                gtot["rejected"][kind] = gtot["rejected"].get(kind, 0) + v
+            gtot["quarantines"] += d["quarantines"]
+            gtot["restores"] += d["restores"]
+            gtot["quarantined_lanes"] += [
+                cuts[si] + lane for lane in d["quarantined_lanes"]]
+        report["guard"] = gtot
     if shards == 1:
         state, eng_out = states[0], engs[0]
     else:
@@ -339,6 +455,33 @@ def _engine_op(trace_op: str, engine: str) -> str:
     if trace_op in _DRIVE_OPS:
         return "observe_many"
     return "intervals" if engine == "regression" else "predict"
+
+
+def _corrupt_batch(xs, ys, taus, recs: list[dict[str, Any]], kind: str,
+                   n_labels: int) -> None:
+    """Apply each record's stamped traffic value fault (schema v3
+    ``fault`` field) to its rows of the stacked tick arrays, in place."""
+    if not any("fault" in r for r in recs):
+        return
+    from repro.robustness.faults import VALUE_FAULTS, poisoned_values
+
+    mode = "regression" if kind == "regression" else "classification"
+    off = 0
+    for r in recs:
+        T = r.get("ticks", 1)
+        f = r.get("fault")
+        if f and f.get("kind") in VALUE_FAULTS:
+            lane = int(f.get("tenant", 0)) % xs.shape[1]
+            xv, yv, tv = poisoned_values(f["kind"], mode=mode,
+                                         n_labels=n_labels)
+            for t in range(off, off + T):
+                if xv is not None:
+                    xs[t, lane, 0] = xv
+                if yv is not None:
+                    ys[t, lane] = yv
+                if tv is not None:
+                    taus[t, lane] = tv
+        off += T
 
 
 def _stack_ticks(keys: list[tuple[int, int]], seed: int, S: int, dim: int,

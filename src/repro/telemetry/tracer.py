@@ -41,6 +41,17 @@ optional, schema v2 (replay/loadgen)
                       violation when sojourn (completion - arrival)
                       exceeds it
     seed        int   generator seed (synthetic traces)
+optional, schema v3 (fault schedule — robustness.faults)
+    fault       dict  the fault stamped onto this record by the chaos
+                      harness: ``{"kind": <fault kind>, ...}`` —
+                      traffic value faults add ``tenant``;
+                      ``duplicate_arrival`` adds ``of_seq`` (the seq of
+                      the earlier observe this record re-delivers).
+                      Replay honors it (corrupts the tick's inputs /
+                      dedups); fault-unaware readers ignore it. v2
+                      files (no fault fields) validate unchanged.
+    delay_s     float injected dispatch delay: replay treats arrival as
+                      ``t + delay_s``
     extra: any remaining keys are recorder-specific (e.g. drained device
     counters on a flush record) and must be JSON-serializable.
 
@@ -55,7 +66,7 @@ import os
 import time
 from typing import Any, IO
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 OP_KINDS = (
     "observe", "observe_many", "predict", "intervals", "pvalues",
@@ -71,7 +82,10 @@ _OPTIONAL = {"compile": bool, "tenants": int, "ticks": int,
              # that ignore unknown keys keep working and v1 files
              # validate unchanged
              "workload": str, "active": list, "slo_s": float,
-             "seed": int}
+             "seed": int,
+             # v3 (fault schedule) fields — same optional-only rule, so
+             # v2 files validate unchanged
+             "fault": dict, "delay_s": float}
 
 TRACE_SCHEMA = {"version": SCHEMA_VERSION, "required": _REQUIRED,
                 "optional": _OPTIONAL, "op_kinds": OP_KINDS}
@@ -115,6 +129,11 @@ def validate_record(rec: dict[str, Any]) -> None:
             for s in rec["active"]):
         raise ValueError(f"trace field 'active' must hold non-negative "
                          f"tenant indices: {rec['active']}")
+    if "fault" in rec and not isinstance(rec["fault"].get("kind"), str):
+        # lenient on purpose (no robustness import): the kind must be a
+        # string; harness-specific fields ride along untyped
+        raise ValueError(f"trace field 'fault' must carry a string "
+                         f"'kind': {rec['fault']}")
 
 
 def iter_trace(path: str, *, validate: bool = True):

@@ -1,0 +1,176 @@
+"""Crash-recovery e2e: a serving child process is SIGKILL'd mid-save,
+a second process restarts from the store, and the continuation is
+bit-identical to an uninterrupted run of the same stream.
+
+The crash child carries an injected ``store.commit`` delay fault (the
+torn-write window, held open for the kill), so the interrupted
+snapshot deterministically never commits: the restart must come up
+from the earlier committed baseline, replay the remaining chunks, and
+land leaf-for-leaf on the oracle's final state — the atomic-commit +
+deterministic-replay contract, for both engines at shards 1 and 8.
+"""
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CHILD = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    mode, shards, root, out, role = (sys.argv[1], int(sys.argv[2]),
+                                     sys.argv[3], sys.argv[4], sys.argv[5])
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.regression.engine import RegressionServingEngine
+    from repro.robustness import Fault, FaultInjector, FaultPlan
+    from repro.serving import AsyncShardedSaver, ServingEngine, SessionStore
+
+    S, T, CH, CAP, WIN, DIM, K = 8, 24, 6, 16, 8, 3, 3
+
+    def mk():
+        if mode == "classification":
+            return ServingEngine(n_sessions=S, capacity=CAP, dim=DIM, k=K,
+                                 n_labels=2, window=WIN, shards=shards)
+        return RegressionServingEngine(n_sessions=S, capacity=CAP,
+                                       dim=DIM, k=K, window=WIN,
+                                       shards=shards)
+
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(T, S, DIM)).astype(np.float32)
+    if mode == "classification":
+        y = rng.integers(0, 2, size=(T, S)).astype(np.int64)
+    else:
+        y = rng.normal(size=(T, S)).astype(np.float32)
+    taus = rng.uniform(size=(T, S)).astype(np.float32)
+
+    def run_chunk(eng, state, c):
+        sl = slice(c * CH, (c + 1) * CH)
+        return eng.observe_many(state, jnp.asarray(X[sl]),
+                                jnp.asarray(y[sl]), jnp.asarray(taus[sl]))
+
+    def dump(state):
+        leaves = [np.asarray(l) for l in
+                  jax.tree_util.tree_leaves(jax.device_get(state))]
+        np.savez(out, **{f"leaf{i}": l for i, l in enumerate(leaves)})
+
+    if role == "resume":
+        store = SessionStore(root)
+        eng, state, step = store.restore_engine()
+        print(f"resumed_from {step}", flush=True)
+        for c in range(step + 1, T // CH):
+            state, _ = run_chunk(eng, state, c)
+        dump(state)
+        print("done", flush=True)
+        sys.exit(0)
+
+    injector = None
+    if role == "crash":
+        # hold the commit window of step 2 open: the parent's SIGKILL
+        # lands mid-save, so step 2 deterministically never commits
+        plan = FaultPlan(0, (Fault("store.commit", 2, "delay",
+                                   param=120.0),))
+        injector = FaultInjector(plan)
+    store = SessionStore(root, injector=injector)
+    saver = AsyncShardedSaver(store, shards, seed=0)
+    eng = mk()
+    state = eng.init_state()
+    for c in range(T // CH):
+        state, _ = run_chunk(eng, state, c)
+        if c == 0:
+            saver.save(0, state, meta=eng.meta())
+            saver.wait()  # committed baseline before the crash window
+            print("baseline_committed", flush=True)
+        if c == 2 and role == "crash":
+            saver.save(2, state, meta=eng.meta())
+            print("save_enqueued 2", flush=True)
+            import time
+            time.sleep(300)  # killed by the parent mid-commit
+    saver.close()
+    dump(state)
+    print("done", flush=True)
+""")
+
+
+def _env():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    src = os.path.join(_REPO, "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def _wait_for(proc, needle, timeout=600):
+    deadline = time.time() + timeout
+    seen = []
+    while time.time() < deadline:
+        line = proc.stdout.readline()
+        if not line:
+            break
+        seen.append(line)
+        if needle in line:
+            return seen
+    raise AssertionError(
+        f"child never printed {needle!r}; got: {''.join(seen)}")
+
+
+@pytest.mark.parametrize("mode", ["classification", "regression"])
+@pytest.mark.parametrize("shards", [1, 8])
+def test_sigkill_mid_save_then_bit_identical_continuation(
+        tmp_path, mode, shards):
+    script = tmp_path / "child.py"
+    script.write_text(_CHILD)
+    root = str(tmp_path / "store")
+    resume_out = str(tmp_path / "resume.npz")
+    oracle_out = str(tmp_path / "oracle.npz")
+
+    def _cmd(role, out, store_root):
+        return [sys.executable, str(script), mode, str(shards),
+                store_root, out, role]
+
+    # 1. serve, then SIGKILL mid-commit of the step-2 snapshot
+    proc = subprocess.Popen(_cmd("crash", str(tmp_path / "crash.npz"),
+                                 root),
+                            stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True,
+                            env=_env())
+    try:
+        seen = _wait_for(proc, "save_enqueued 2")
+        assert any("baseline_committed" in ln for ln in seen)
+        time.sleep(0.2)  # let the worker reach the held-open commit
+        os.kill(proc.pid, signal.SIGKILL)
+    finally:
+        proc.stdout.close()
+        proc.wait(timeout=60)
+
+    # the interrupted step must not have committed (atomic commit)
+    assert not os.path.exists(
+        os.path.join(root, f"step_{2:09d}", "COMMITTED"))
+
+    # 2. restart from the store and replay the remaining chunks
+    r = subprocess.run(_cmd("resume", resume_out, root),
+                       capture_output=True, text=True, env=_env(),
+                       timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "resumed_from 0" in r.stdout, r.stdout
+
+    # 3. uninterrupted oracle over the same stream
+    r = subprocess.run(_cmd("oracle", oracle_out,
+                            str(tmp_path / "store2")),
+                       capture_output=True, text=True, env=_env(),
+                       timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+    got = np.load(resume_out)
+    want = np.load(oracle_out)
+    assert sorted(got.files) == sorted(want.files)
+    for name in want.files:
+        assert np.array_equal(got[name], want[name], equal_nan=True), \
+            f"leaf {name} diverged after crash recovery"
